@@ -1,0 +1,51 @@
+"""Beyond-paper study: keep-alive TTL vs cost/latency frontier (paper §5's
+"declarative minimum warm time"), plus the predictive-prewarm ablation."""
+from __future__ import annotations
+
+from repro.core import metrics, sla
+from repro.core.keepalive import PrewarmSchedule, run_with_prewarm
+from repro.core.platform import ServerlessPlatform
+from repro.core.simulator import Simulator
+from repro.core.workload import poisson, step_ramp
+
+
+def ttl_frontier(plat: ServerlessPlatform, model: str = "resnet18",
+                 mem: int = 1024, rate: float = 0.02):
+    spec = plat.deploy_paper_model(model, mem)
+    rows, lines = [], [f"# Keep-alive frontier ({model}@{mem}MB, "
+                       f"poisson {rate}/s): ttl, cold_frac, p99_s, "
+                       f"container_s/req"]
+    wl = poisson(rate, 20000.0, seed=3)
+    for ttl in (0.0, 30.0, 60.0, 120.0, 300.0, 600.0, 1200.0):
+        sim = Simulator(spec, seed=0, keepalive_s=ttl)
+        recs = sim.run(list(wl))
+        rep = sla.bimodality_report(recs)
+        cs = metrics.container_seconds(recs, ttl) / max(len(recs), 1)
+        rows.append((f"keepalive/{model}/ttl{int(ttl)}",
+                     rep["p99_s"] * 1e6, rep["cold_fraction"]))
+        lines.append(f"  {ttl:7.0f}s  cold={rep['cold_fraction']:.2f}  "
+                     f"p99={rep['p99_s']:.2f}s  ctr_s/req={cs:.1f}")
+    return rows, "\n".join(lines)
+
+
+def prewarm_ablation(plat: ServerlessPlatform, model: str = "squeezenet",
+                     mem: int = 1024):
+    spec = plat.deploy_paper_model(model, mem)
+    ramp = step_ramp()
+    base = Simulator(spec, seed=0)
+    base_recs = base.run(list(ramp))
+    base_s = metrics.summarize(base_recs)
+    pre_recs, _ = run_with_prewarm(
+        spec, list(ramp), PrewarmSchedule(at_s=0.0, count=100, lead_s=30.0),
+        seed=0)
+    pre_s = metrics.summarize(pre_recs)
+    rows = [(f"prewarm/{model}/base", base_s.p99_s * 1e6,
+             sum(r.cold for r in base_recs)),
+            (f"prewarm/{model}/prewarmed", pre_s.p99_s * 1e6,
+             sum(r.cold for r in pre_recs))]
+    lines = ["# Predictive prewarm ablation (step ramp, Fig 7 workload)",
+             f"  baseline : colds={sum(r.cold for r in base_recs):3d}  "
+             f"p99={base_s.p99_s:.2f}s mean={base_s.mean_response_s:.3f}s",
+             f"  prewarmed: colds={sum(r.cold for r in pre_recs):3d}  "
+             f"p99={pre_s.p99_s:.2f}s mean={pre_s.mean_response_s:.3f}s"]
+    return rows, "\n".join(lines)

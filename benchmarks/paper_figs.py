@@ -1,0 +1,95 @@
+"""One benchmark per paper table/figure.
+
+Each function returns a list of CSV rows (name, us_per_call, derived) plus a
+human-readable table block, where:
+  * Table 1   -> the price ladder (exact reproduction)
+  * Figs 1-3  -> warm latency/prediction/cost vs memory per model
+  * Figs 4-6  -> cold latency vs memory per model
+  * Fig 7     -> the step-ramp workload itself (checksum of the schedule)
+  * Figs 8-10 -> scalability latency vs memory per model
+"""
+from __future__ import annotations
+
+from repro.core import billing, metrics
+from repro.core.function import PAPER_TIERS
+from repro.core.platform import ServerlessPlatform
+from repro.core.workload import step_ramp
+
+MODELS = ("squeezenet", "resnet18", "resnext50")
+
+
+def _tiers_for(plat, model):
+    out = []
+    for m in PAPER_TIERS:
+        try:
+            out.append((m, plat.deploy_paper_model(model, m)))
+        except ValueError:
+            continue
+    return out
+
+
+def table1_pricing():
+    rows, lines = [], ["# Table 1: price per 100ms"]
+    for m, p in billing.PRICE_PER_100MS.items():
+        rows.append((f"table1/{m}MB", p * 1e6, p))
+        lines.append(f"  {m:5d} MB  ${p:.9f}")
+    return rows, "\n".join(lines)
+
+
+def warm_figs(plat: ServerlessPlatform):
+    rows, lines = [], []
+    for fig, model in zip((1, 2, 3), MODELS):
+        lines.append(f"# Fig {fig}: warm execution ({model}) — "
+                     f"mem, latency_s, prediction_s, cost*1e3")
+        for mem, spec in _tiers_for(plat, model):
+            rep = plat.run_warm_experiment(spec)
+            w = rep.warm
+            rows.append((f"fig{fig}_warm/{model}/{mem}MB",
+                         w.mean_response_s * 1e6, w.total_cost))
+            lines.append(f"  {mem:5d}  {w.mean_response_s:.3f}"
+                         f"±{w.ci95_response_s:.3f}  "
+                         f"{w.mean_prediction_s:.3f}±{w.ci95_prediction_s:.3f}"
+                         f"  {w.total_cost*1e3:.4f}")
+    return rows, "\n".join(lines)
+
+
+def cold_figs(plat: ServerlessPlatform):
+    rows, lines = [], []
+    for fig, model in zip((4, 5, 6), MODELS):
+        lines.append(f"# Fig {fig}: cold execution ({model}) — "
+                     f"mem, latency_s, prediction_s")
+        for mem, spec in _tiers_for(plat, model):
+            rep = plat.run_cold_experiment(spec)
+            c = rep.cold
+            rows.append((f"fig{fig}_cold/{model}/{mem}MB",
+                         c.mean_response_s * 1e6, rep.bimodality["mode_separation"]))
+            lines.append(f"  {mem:5d}  {c.mean_response_s:.3f}"
+                         f"±{c.ci95_response_s:.3f}  {c.mean_prediction_s:.3f}")
+    return rows, "\n".join(lines)
+
+
+def fig7_workload():
+    reqs = step_ramp()
+    per_sec = {}
+    for r in reqs:
+        per_sec[int(r.arrival_s)] = per_sec.get(int(r.arrival_s), 0) + 1
+    lines = ["# Fig 7: step ramp (requests per second)"]
+    lines.append("  " + " ".join(f"{per_sec[s]}" for s in sorted(per_sec)))
+    rows = [("fig7_ramp/total_requests", float(len(reqs)), len(per_sec))]
+    return rows, "\n".join(lines)
+
+
+def scale_figs(plat: ServerlessPlatform):
+    rows, lines = [], []
+    for fig, model in zip((8, 9, 10), MODELS):
+        lines.append(f"# Fig {fig}: scalability ({model}) — "
+                     f"mem, latency_s, prediction_s, containers, colds")
+        for mem, spec in _tiers_for(plat, model):
+            rep = plat.run_scalability_experiment(spec)
+            s = rep.summary
+            rows.append((f"fig{fig}_scale/{model}/{mem}MB",
+                         s.mean_response_s * 1e6, rep.cold_starts))
+            lines.append(f"  {mem:5d}  {s.mean_response_s:.3f}"
+                         f"±{s.ci95_response_s:.3f}  {s.mean_prediction_s:.3f}"
+                         f"  n_containers~{rep.cold_starts}")
+    return rows, "\n".join(lines)

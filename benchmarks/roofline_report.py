@@ -1,0 +1,30 @@
+"""Roofline benchmark: renders §Roofline from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.roofline import load_records
+
+
+def roofline(out_dir: str = "artifacts/dryrun", mesh_tag: str = "single"):
+    recs = [r for r in load_records(out_dir)
+            if ("multi" if mesh_tag == "multi" else "single")
+            == ("multi" if r.get("multi_pod") else "single")]
+    rows, lines = [], [f"# Roofline ({mesh_tag}-pod mesh) — per (arch x shape):"
+                       " compute_s / memory_s / collective_s, dominant, "
+                       "useful-FLOPs ratio, HBM GB/chip"]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        t = r["roofline"]
+        mem = r.get("memory", {}).get("total_bytes_per_device", 0) / 1e9
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        rows.append((name, t["bound_time_s"] * 1e6, t["dominant"]))
+        lines.append(
+            f"  {r['arch']:24s} {r['shape']:12s} "
+            f"{t['compute_s']:+.3e} {t['memory_s']:+.3e} "
+            f"{t['collective_s']:+.3e}  {t['dominant']:10s} "
+            f"useful={t['useful_flops_ratio']:.2f}  {mem:7.2f}GB")
+    if not recs:
+        lines.append("  (no dry-run artifacts found — run "
+                     "python -m repro.launch.dryrun --all first)")
+    return rows, "\n".join(lines)

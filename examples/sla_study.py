@@ -1,0 +1,49 @@
+"""SLA & cost study: the paper's §3.5 'advisor' + §5 keep-warm future work.
+
+Sweeps memory tiers for ResNet-18, recommends the cheapest SLA-meeting tier,
+then shows the keep-alive TTL frontier and the predictive-prewarm fix.
+
+    PYTHONPATH=src python examples/sla_study.py
+"""
+from repro.core import advisor, metrics, sla
+from repro.core.function import PAPER_TIERS
+from repro.core.keepalive import PrewarmSchedule, run_with_prewarm
+from repro.core.platform import ServerlessPlatform
+from repro.core.simulator import Simulator
+from repro.core.workload import poisson, step_ramp, warm_burst
+
+plat = ServerlessPlatform(seed=0)
+handler = plat.deploy_paper_model("resnet18", 1024).handler
+
+# 1. memory advisor -------------------------------------------------------
+target = sla.SLA("interactive", p95_s=0.6)
+best, reports, ok = advisor.recommend(handler, warm_burst(n=25), target,
+                                      tiers=PAPER_TIERS)
+print(f"advisor: cheapest tier meeting p95<={target.p95_s}s -> "
+      f"{best.memory_mb} MB (${best.total_cost:.7f}; p99 {best.p99_s:.3f}s)")
+for r in reports:
+    if r.feasible:
+        mark = "<- recommended" if r.memory_mb == best.memory_mb else ""
+        print(f"  {r.memory_mb:5d} MB  p99={r.p99_s:.3f}s "
+              f"cost=${r.total_cost:.7f} sla_ok={r.sla_ok} {mark}")
+
+# 2. keep-alive frontier --------------------------------------------------
+spec = plat.deploy_paper_model("resnet18", 1024)
+print("\nkeep-alive TTL frontier (poisson 0.02 req/s):")
+wl = poisson(0.02, 20000.0, seed=3)
+for ttl in (30.0, 120.0, 600.0):
+    recs = Simulator(spec, seed=0, keepalive_s=ttl).run(list(wl))
+    rep = sla.bimodality_report(recs)
+    print(f"  ttl={ttl:5.0f}s cold_frac={rep['cold_fraction']:.2f} "
+          f"p99={rep['p99_s']:.2f}s")
+
+# 3. predictive prewarm ---------------------------------------------------
+ramp = step_ramp()
+base = Simulator(spec, seed=0).run(list(ramp))
+pre, _ = run_with_prewarm(spec, list(ramp),
+                          PrewarmSchedule(at_s=0.0, count=100, lead_s=30.0),
+                          seed=0)
+print(f"\nstep-ramp colds: baseline={sum(r.cold for r in base)}, "
+      f"prewarmed={sum(r.cold for r in pre)} "
+      f"(p99 {metrics.summarize(base).p99_s:.2f}s -> "
+      f"{metrics.summarize(pre).p99_s:.2f}s)")

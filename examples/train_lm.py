@@ -1,0 +1,36 @@
+"""Training driver: the substrate's train loop on a reduced LM.
+
+The paper is a *serving* paper, so the canonical end-to-end driver is
+examples/serve_llm.py; this example exercises the training substrate
+(AdamW + cosine LR + microbatched grad accumulation + checkpointing) on a
+CPU-sized model.  Pass --steps/--dmodel to scale up on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+import argparse
+
+from repro.configs.registry import ARCHS
+from repro.train.loop import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--arch", default="deepseek-7b")
+ap.add_argument("--dmodel", type=int, default=256)
+ap.add_argument("--layers", type=int, default=4)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--micro", type=int, default=2)
+args = ap.parse_args()
+
+cfg = ARCHS[args.arch].smoke.replace(
+    d_model=args.dmodel, num_layers=args.layers,
+    d_ff=args.dmodel * 3, vocab_size=2048)
+print(f"training {cfg.name}: {args.layers}L d={args.dmodel} "
+      f"batch={args.batch} seq={args.seq} micro={args.micro}")
+rep = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+            lr=3e-3, num_micro=args.micro, ckpt_path="artifacts/ck_example",
+            log_every=max(args.steps // 6, 1))
+print(f"\n{rep.params_m:.1f}M params | loss {rep.initial_loss:.3f} -> "
+      f"{rep.final_loss:.3f} in {rep.steps} steps ({rep.wall_s:.1f}s)")
+assert rep.final_loss < rep.initial_loss
+print("checkpoint written to artifacts/ck_example.npz")

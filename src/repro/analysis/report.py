@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.analysis.roofline import load_records
+
+
+def _key(r):
+    return (r["arch"], r["shape"])
+
+
+def roofline_md(out_dir: str, *, multi_pod: bool = False,
+                baseline_dir: str | None = None) -> str:
+    recs = [r for r in load_records(out_dir)
+            if bool(r.get("multi_pod")) == multi_pod]
+    base = {}
+    if baseline_dir:
+        base = {_key(r): r for r in load_records(baseline_dir)
+                if bool(r.get("multi_pod")) == multi_pod}
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| useful | HBM GB/chip | fits 16GB |")
+    if base:
+        hdr = hdr[:-1] + " bound vs baseline |"
+    sep = "|" + "---|" * (10 if base else 9)
+    rows = [hdr, sep]
+    for r in sorted(recs, key=_key):
+        t = r["roofline"]
+        mem = r.get("memory", {}).get("total_bytes_per_device", 0) / 1e9
+        row = (f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} "
+               f"| {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+               f"| **{t['dominant']}** | {t['useful_flops_ratio']:.2f} "
+               f"| {mem:.1f} | {'yes' if mem < 16 else 'NO'} |")
+        if base:
+            b = base.get(_key(r))
+            if b:
+                ratio = (b["roofline"]["bound_time_s"]
+                         / max(t["bound_time_s"], 1e-12))
+                row = row[:-1] + f" {ratio:.1f}x |"
+            else:
+                row = row[:-1] + " - |"
+        rows.append(row)
+    return "\n".join(rows)
+
+
+def dryrun_md(out_dir: str) -> str:
+    recs = load_records(out_dir)
+    single = [r for r in recs if not r.get("multi_pod")]
+    multi = [r for r in recs if r.get("multi_pod")]
+    lines = [f"* single-pod (16,16)=256 chips: **{len(single)}** pairs "
+             "lowered+compiled",
+             f"* multi-pod (2,16,16)=512 chips: **{len(multi)}** pairs "
+             "lowered+compiled"]
+    worst = sorted(single, key=lambda r: -r.get("compile_s", 0))[:3]
+    lines.append("* slowest compiles: " + ", ".join(
+        f"{r['arch']}x{r['shape']} {r['compile_s']:.0f}s" for r in worst))
+    total_coll = sum(r["collectives"]["counts"].get(k, 0)
+                     for r in single for k in r["collectives"]["counts"])
+    lines.append(f"* total collective op sites analysed (single-pod): "
+                 f"{total_coll}")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run summary (baseline artifacts)\n")
+    print(dryrun_md("artifacts/dryrun"))
+    print("\n## Roofline — paper-faithful baseline, single pod\n")
+    print(roofline_md("artifacts/dryrun", multi_pod=False))
+    print("\n## Roofline — optimized, single pod (vs baseline)\n")
+    print(roofline_md("artifacts/dryrun_opt", multi_pod=False,
+                      baseline_dir="artifacts/dryrun"))
+    print("\n## Roofline — optimized, multi-pod (2,16,16)\n")
+    print(roofline_md("artifacts/dryrun_opt", multi_pod=True,
+                      baseline_dir="artifacts/dryrun"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e target).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` FLOPs/bytes on the post-SPMD module are *per-device*
+numbers (the compiled module is the per-chip program), so we scale by chips to
+get the global numerator, which then cancels — i.e. terms are per-chip seconds
+directly.  collective_bytes from repro.analysis.hlo is already per-chip link
+traffic.  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) with D = global
+tokens processed; train steps cost 3x the forward (fwd+bwd) — we report the
+ratio against the *step-appropriate* model flops.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.common import ModelConfig
+
+
+def model_flops(cfg: ModelConfig, kind: str, batch: int, seq: int) -> float:
+    n_active = cfg.param_count(active_only=True)
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * n_active * tokens            # 2*N fwd + 4*N bwd
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n_active * tokens
+    if kind == "decode":
+        return 2.0 * n_active * batch             # one token per sequence
+    return 0.0
+
+
+def roofline_terms(cfg, meta: dict, analysis: dict, cost: dict) -> dict:
+    """analysis: repro.analysis.hlo.analyze output (per-chip, trip-weighted);
+    cost: raw XLA cost_analysis (kept as a cross-check, NOT trip-weighted)."""
+    chips = meta.get("n_devices", 1)
+    flops_per_chip = float(analysis.get("flops_per_chip", 0.0))
+    # XLA's bytes-accessed is fusion-aware AND trip-aware (verified) — prefer
+    # it; the static traffic estimate overcounts in-place cache updates.
+    bytes_per_chip = float(cost.get("bytes accessed",
+                                    analysis.get("traffic_per_chip", 0.0)))
+    coll_per_chip = float(analysis.get("collectives", {}).get("total", 0.0))
+
+    t_compute = flops_per_chip / PEAK_FLOPS_BF16
+    t_memory = bytes_per_chip / HBM_BW
+    t_collective = coll_per_chip / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+
+    from repro.configs.base import SHAPES
+    shp = SHAPES.get(meta.get("shape", ""), None)
+    mf = 0.0
+    if shp is not None and cfg.family != "cnn":
+        mf = model_flops(cfg, meta.get("kind", shp.kind), shp.global_batch,
+                         shp.seq_len)
+    hlo_flops_global = flops_per_chip * chips
+    useful_ratio = (mf / hlo_flops_global) if hlo_flops_global else 0.0
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful_ratio,
+        "bound_time_s": max(terms.values()),
+    }
+
+
+def load_records(out_dir: str = "artifacts/dryrun") -> list:
+    recs = []
+    if not os.path.isdir(out_dir):
+        return recs
+    for fn in sorted(os.listdir(out_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(out_dir, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list) -> str:
+    """Markdown roofline table for EXPERIMENTS.md."""
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful_FLOPs | bytes/chip |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in recs:
+        t = r.get("roofline", {})
+        mem = r.get("memory", {}).get("total_bytes_per_device", 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {'x'.join(map(str, r['mesh']))} "
+            f"| {t.get('compute_s', 0):.3e} | {t.get('memory_s', 0):.3e} "
+            f"| {t.get('collective_s', 0):.3e} | {t.get('dominant', '?')} "
+            f"| {t.get('useful_flops_ratio', 0):.2f} | {mem / 1e9:.2f}GB |")
+    return "\n".join(rows)

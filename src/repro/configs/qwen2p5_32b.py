@@ -1,0 +1,22 @@
+"""qwen2.5-32b — dense GQA with QKV bias [hf:Qwen/Qwen2.5 family]."""
+from repro.configs.base import ArchSpec
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b", family="dense",
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=27648, vocab_size=152064, head_dim=128,
+    qkv_bias=True, rope_theta=1e6,
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen2.5-smoke", num_layers=2, d_model=128, num_heads=4,
+    num_kv_heads=2, d_ff=256, vocab_size=512, head_dim=32,
+    param_dtype="float32", compute_dtype="float32",
+)
+
+SPEC = ArchSpec(
+    arch_id="qwen2.5-32b", config=CONFIG, smoke=SMOKE,
+    source="hf:Qwen/Qwen2.5 (architecture per family card)",
+    long_strategy="window", long_window=4096,
+)

@@ -1,0 +1,111 @@
+"""Central architecture registry + input_specs for every (arch x shape).
+
+``input_specs(arch_id, shape_id, smoke=False)`` returns
+``(step_kind, kwargs-of-ShapeDtypeStructs)`` — weak-type-correct, shardable
+stand-ins with **no device allocation** — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (cnn_configs, deepseek_7b, granite_moe_3b,
+                           llava_next_mistral_7b, mistral_nemo_12b,
+                           qwen1p5_110b, qwen2p5_32b, qwen3_moe_235b,
+                           recurrentgemma_9b, rwkv6_1p6b, whisper_tiny)
+from repro.configs.base import SHAPES, ArchSpec, InputShape
+from repro.models import api
+from repro.models.common import ModelConfig
+
+ARCHS: dict[str, ArchSpec] = {
+    s.arch_id: s
+    for s in [
+        rwkv6_1p6b.SPEC,
+        recurrentgemma_9b.SPEC,
+        whisper_tiny.SPEC,
+        llava_next_mistral_7b.SPEC,
+        deepseek_7b.SPEC,
+        granite_moe_3b.SPEC,
+        qwen2p5_32b.SPEC,
+        qwen3_moe_235b.SPEC,
+        qwen1p5_110b.SPEC,
+        mistral_nemo_12b.SPEC,
+    ]
+}
+
+# the paper's own serving payloads (not part of the assigned 10)
+PAPER_MODELS: dict[str, ArchSpec] = {
+    s.arch_id: s for s in
+    [cnn_configs.SQUEEZENET, cnn_configs.RESNET18, cnn_configs.RESNEXT50]
+}
+
+ALL: dict[str, ArchSpec] = {**ARCHS, **PAPER_MODELS}
+
+
+def get(arch_id: str) -> ArchSpec:
+    return ALL[arch_id]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _modal_extras(cfg: ModelConfig, batch: int) -> dict:
+    """Stubbed modality-frontend inputs (see DESIGN.md carve-out)."""
+    ex = {}
+    if cfg.family == "audio":
+        ex["frame_embeds"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                                  cfg.compute_dtype)
+    if cfg.family == "vlm":
+        ex["patch_embeds"] = _sds((batch, cfg.num_image_tokens, cfg.d_model),
+                                  cfg.compute_dtype)
+    return ex
+
+
+def input_specs(arch_id: str, shape_id: str, *, smoke: bool = False,
+                batch: int | None = None, seq: int | None = None):
+    """Returns (kind, cfg, kwargs) where kwargs are ShapeDtypeStruct stand-ins
+    for the step function of that shape kind:
+        train  -> train_step(params, opt_state, batch)        batch kwargs
+        prefill-> prefill_step(params, tokens/extras)          input kwargs
+        decode -> serve_step(params, cache, token, pos)        cache+token kwargs
+    """
+    spec = get(arch_id)
+    shp: InputShape = SHAPES[shape_id]
+    cfg = spec.smoke if smoke else spec.config_for_shape(shape_id)
+    b = batch if batch is not None else shp.global_batch
+    s = seq if seq is not None else shp.seq_len
+    if smoke and batch is None:
+        b, s = 2, min(s, 16)
+
+    if cfg.family == "cnn":
+        kw = {"images": _sds((b, cfg.image_size, cfg.image_size, 3), "float32")}
+        return "predict", cfg, kw
+
+    if shp.kind == "train":
+        kw = {"tokens": _sds((b, s), "int32"), "labels": _sds((b, s), "int32")}
+        kw.update(_modal_extras(cfg, b))
+        return "train", cfg, kw
+
+    if shp.kind == "prefill":
+        kw = {"tokens": _sds((b, s), "int32")}
+        kw.update(_modal_extras(cfg, b))
+        return "prefill", cfg, kw
+
+    # decode: one new token against an S-long cache/state
+    kw = {
+        "cache": api.cache_spec(cfg, b, s),
+        "token": _sds((b,), "int32"),
+        "pos": _sds((), "int32"),
+    }
+    return "decode", cfg, kw
+
+
+def pairs(include_unsupported: bool = False):
+    """All (arch_id, shape_id) combinations in the assignment matrix."""
+    out = []
+    for aid, spec in ARCHS.items():
+        for sid in SHAPES:
+            if include_unsupported or spec.supports(sid):
+                out.append((aid, sid))
+    return out

@@ -1,0 +1,41 @@
+"""Demand tracking / scale-out accounting (paper §3.4).
+
+Lambda scales out implicitly (one container per concurrent request); the
+platform-side view of that scaling is what the paper's Fig 8-10 exercise.
+``concurrency_profile`` reconstructs the in-flight/container timeline from
+simulator records; ``Autoscaler`` adds the beyond-paper predictive policy
+(target warm-pool sizing from recent arrival rate — Knative-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def concurrency_profile(records, dt: float = 0.1) -> dict:
+    """Timeline of in-flight requests and distinct containers."""
+    if not records:
+        return {"t": [], "inflight": [], "containers": 0}
+    t0 = min(r.arrival_s for r in records)
+    t1 = max(r.end_s for r in records)
+    ts = np.arange(t0, t1 + dt, dt)
+    inflight = np.zeros_like(ts)
+    for r in records:
+        inflight[(ts >= r.arrival_s) & (ts < r.end_s)] += 1
+    return {"t": ts.tolist(), "inflight": inflight.tolist(),
+            "containers": len({r.container_id for r in records}),
+            "peak_inflight": int(inflight.max())}
+
+
+@dataclasses.dataclass
+class Autoscaler:
+    """Predictive warm-pool sizing: pool = ceil(rate * service_time * margin)."""
+    window_s: float = 5.0
+    margin: float = 1.5
+
+    def desired_pool(self, arrivals: list, now: float,
+                     service_time_s: float) -> int:
+        recent = [a for a in arrivals if now - self.window_s <= a <= now]
+        rate = len(recent) / self.window_s
+        return int(np.ceil(rate * service_time_s * self.margin))

@@ -1,0 +1,49 @@
+"""Metered billing — paper Table 1, verbatim.
+
+Lambda bills execution in 100 ms ticks at a per-tick price proportional to
+the memory tier.  The paper's observation C3: total cost is NOT monotonic in
+memory — the per-tick price rises linearly but execution time falls, so the
+cheapest tier sits mid-curve, and over-provisioning past the CPU knee only
+adds cost.
+"""
+from __future__ import annotations
+
+import math
+
+# paper Table 1: memory (MB) -> $ per 100 ms
+PRICE_PER_100MS = {
+    128: 0.000000208,
+    256: 0.000000417,
+    384: 0.000000625,
+    512: 0.000000834,
+    640: 0.000001042,
+    768: 0.00000125,
+    896: 0.000001459,
+    1024: 0.000001667,
+    1152: 0.000001875,
+    1280: 0.000002084,
+    1408: 0.000002292,
+    1536: 0.000002501,
+}
+
+REQUEST_PRICE = 0.0000002  # $ per invocation (Lambda request charge)
+TICK_S = 0.1
+
+
+def price_per_100ms(memory_mb: int) -> float:
+    if memory_mb in PRICE_PER_100MS:
+        return PRICE_PER_100MS[memory_mb]
+    # tiers between the paper's sampled rows: linear in memory (AWS pricing)
+    return PRICE_PER_100MS[128] * (memory_mb / 128.0)
+
+
+def billed_ticks(exec_seconds: float) -> int:
+    return max(int(math.ceil(exec_seconds / TICK_S)), 1)
+
+
+def invocation_cost(exec_seconds: float, memory_mb: int,
+                    include_request_charge: bool = False) -> float:
+    c = billed_ticks(exec_seconds) * price_per_100ms(memory_mb)
+    if include_request_charge:
+        c += REQUEST_PRICE
+    return c

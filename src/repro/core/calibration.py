@@ -1,0 +1,84 @@
+"""Calibration: measure REAL JAX forward passes to parameterize the simulator.
+
+The paper measures MXNet forward passes inside Lambda; we measure the same
+models' JAX forward passes on this host (one full CPU) and scale by the
+tier's CPU share.  Results are cached to artifacts/calibration.json so the
+simulator and all paper-figure benchmarks are deterministic afterwards.
+
+Measured per model:
+  * base_cpu_seconds   — steady-state prediction time (jit-compiled, batch 1)
+  * first_call_seconds — compile+load on first invocation (feeds the cold
+    LOAD phase of the modern-substrate handlers)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.function import Handler
+from repro.models import cnn
+from repro.models.common import ModelConfig
+
+CAL_PATH = "artifacts/calibration.json"
+
+# paper §3 ground truth per model: (package MB, peak memory MB, 2017-era
+# full-CPU prediction seconds used if no local calibration is available)
+PAPER_MODELS = {
+    "squeezenet": {"package_mb": 5.0, "peak_mb": 85.0, "fallback_s": 0.22},
+    "resnet18": {"package_mb": 45.0, "peak_mb": 229.0, "fallback_s": 0.35},
+    "resnext50": {"package_mb": 98.0, "peak_mb": 429.0, "fallback_s": 0.80},
+}
+
+
+def _measure(variant: str, image_size: int = 224, repeats: int = 5) -> dict:
+    cfg = ModelConfig(name=variant, family="cnn", cnn_variant=variant,
+                      image_size=image_size, param_dtype="float32",
+                      compute_dtype="float32")
+    params = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    img = jnp.zeros((1, image_size, image_size, 3), jnp.float32)
+    fwd = jax.jit(lambda p, x: cnn.forward(p, x, cfg))
+    t0 = time.perf_counter()
+    fwd(params, img).block_until_ready()
+    first = time.perf_counter() - t0
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fwd(params, img).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return {"base_cpu_seconds": times[len(times) // 2],
+            "first_call_seconds": first}
+
+
+def calibrate(path: str = CAL_PATH, force: bool = False) -> dict:
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    out = {}
+    for variant in PAPER_MODELS:
+        out[variant] = _measure(variant)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def paper_handler(variant: str, *, calibrated: dict | None = None,
+                  use_fallback: bool = False) -> Handler:
+    info = PAPER_MODELS[variant]
+    if use_fallback or calibrated is None:
+        base = info["fallback_s"]
+    else:
+        base = calibrated.get(variant, {}).get("base_cpu_seconds",
+                                               info["fallback_s"])
+    return Handler(
+        name=variant,
+        base_cpu_seconds=float(base),
+        bootstrap_cpu_seconds=1.2,          # MXNet import + runtime init
+        package_mb=info["package_mb"],
+        peak_memory_mb=info["peak_mb"],
+    )

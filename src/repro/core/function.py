@@ -1,0 +1,62 @@
+"""FunctionSpec / Handler / memory tiers — the unit of deployment (paper §3).
+
+A Handler abstracts "what the Lambda does": for the paper's workload it wraps
+a real JAX CNN forward pass whose single-CPU time is measured once by
+``repro.core.calibration`` (exactly as the paper measures MXNet predictions);
+for the modern substrate it wraps a ``repro.serving`` engine step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+# AWS Lambda memory tiers (paper Table 1): 128..1536 MB in 64 MB steps;
+# the paper's figures sample every 128 MB.
+MEMORY_TIERS = tuple(range(128, 1537, 64))
+PAPER_TIERS = (128, 256, 384, 512, 640, 768, 896, 1024, 1152, 1280, 1408, 1536)
+
+
+@dataclasses.dataclass(frozen=True)
+class Handler:
+    """Execution profile of a deployed function.
+
+    base_cpu_seconds: prediction time at one full vCPU (calibrated).
+    bootstrap_cpu_seconds: runtime+framework import cost at one full vCPU
+        (MXNet import + init in the paper).
+    package_mb: deployment package size (model weights + deps) — the paper's
+        models are 5/45/98 MB; Lambda caps ephemeral storage at 512 MB.
+    peak_memory_mb: measured function working set (85/229/429 MB in §3);
+        deploying below this tier fails, like Lambda OOM-kills.
+    run: optional callable executing the real model (used by the live-predict
+        examples; the simulator uses calibrated times for determinism).
+    """
+    name: str
+    base_cpu_seconds: float
+    bootstrap_cpu_seconds: float = 1.2
+    package_mb: float = 50.0
+    peak_memory_mb: float = 128.0
+    run: Optional[Callable] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSpec:
+    """A deployed serverless function: handler + declared memory size."""
+    handler: Handler
+    memory_mb: int = 1024
+
+    def __post_init__(self):
+        if self.memory_mb not in MEMORY_TIERS:
+            raise ValueError(f"memory {self.memory_mb} not a Lambda tier "
+                             f"(128..1536 step 64)")
+        if self.memory_mb < self.handler.peak_memory_mb:
+            raise ValueError(
+                f"{self.handler.name}: peak working set "
+                f"{self.handler.peak_memory_mb:.0f} MB exceeds declared "
+                f"{self.memory_mb} MB (Lambda would OOM-kill)")
+        if self.handler.package_mb > 512.0:
+            raise ValueError("deployment package exceeds Lambda's 512 MB "
+                             "ephemeral storage (paper §3.5 limitation)")
+
+    @property
+    def name(self) -> str:
+        return f"{self.handler.name}@{self.memory_mb}"

@@ -1,0 +1,69 @@
+"""Keep-alive policy studies (paper §5: "a declarative way to describe ...
+the minimum time to keep warm containers").
+
+The simulator's baseline is Lambda's fixed idle TTL.  This module adds the
+policies the paper asks for, plus the analysis connecting TTL to the
+cost/latency frontier:
+
+  * FixedTTL        — Lambda baseline.
+  * BudgetTTL       — largest TTL whose provider-side container-seconds stay
+                      under a budget for an expected request rate.
+  * PrewarmSchedule — keep N containers warm ahead of a known ramp
+                      (predictive pre-warm; eliminates ramp colds entirely).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.function import FunctionSpec
+from repro.core.simulator import Simulator
+from repro.core.workload import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedTTL:
+    ttl_s: float = 480.0
+
+
+def cold_probability(ttl_s: float, rate_rps: float) -> float:
+    """For Poisson arrivals on one container: P(gap > TTL) = exp(-rate*TTL)."""
+    return float(np.exp(-rate_rps * ttl_s))
+
+
+def budget_ttl(rate_rps: float, container_second_budget_per_req: float,
+               lo: float = 0.0, hi: float = 3600.0) -> float:
+    """Largest TTL with expected idle container-seconds per request
+    E[min(gap, TTL)] <= budget.  E[min(gap,TTL)] = (1-exp(-r*TTL))/r."""
+    for _ in range(64):
+        mid = 0.5 * (lo + hi)
+        exp_idle = (1.0 - np.exp(-rate_rps * mid)) / rate_rps
+        if exp_idle <= container_second_budget_per_req:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+@dataclasses.dataclass(frozen=True)
+class PrewarmSchedule:
+    """Provision `count` containers `lead_s` before `at_s` (known ramp)."""
+    at_s: float
+    count: int
+    lead_s: float = 10.0
+
+    def requests(self) -> list:
+        """Synthetic priming requests that warm the pool ahead of time.
+        Negative times are fine — the simulator clock is relative."""
+        t = self.at_s - self.lead_s
+        return [Request(-1000 - i, t + 1e-3 * i, "prewarm")
+                for i in range(self.count)]
+
+
+def run_with_prewarm(spec: FunctionSpec, requests: list,
+                     schedule: PrewarmSchedule, **sim_kw):
+    sim = Simulator(spec, **sim_kw)
+    merged = sorted(requests + schedule.requests(), key=lambda r: r.arrival_s)
+    records = sim.run(merged)
+    return [r for r in records if r.tag != "prewarm"], sim

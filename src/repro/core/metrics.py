@@ -1,0 +1,73 @@
+"""Request-level metrics (paper §3: response time, prediction time, cost),
+with means and 95% confidence intervals as the paper reports."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+def _ci95(xs) -> float:
+    xs = np.asarray(xs, dtype=float)
+    if xs.size <= 1:
+        return 0.0
+    return float(1.96 * xs.std(ddof=1) / math.sqrt(xs.size))
+
+
+@dataclasses.dataclass
+class Summary:
+    n: int
+    n_cold: int
+    mean_response_s: float
+    ci95_response_s: float
+    mean_prediction_s: float
+    ci95_prediction_s: float
+    p50_s: float
+    p95_s: float
+    p99_s: float
+    max_s: float
+    total_cost: float
+    mean_cost: float
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def summarize(records, *, warm_only: bool = False, cold_only: bool = False,
+              drop_tags: tuple = ("prime",)) -> Summary:
+    rs = [r for r in records if r.tag not in drop_tags]
+    if warm_only:
+        rs = [r for r in rs if not r.cold]
+    if cold_only:
+        rs = [r for r in rs if r.cold]
+    if not rs:
+        return Summary(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)
+    lat = np.array([r.response_s for r in rs])
+    pred = np.array([r.prediction_s for r in rs])
+    cost = np.array([r.cost for r in rs])
+    return Summary(
+        n=len(rs), n_cold=sum(r.cold for r in rs),
+        mean_response_s=float(lat.mean()), ci95_response_s=_ci95(lat),
+        mean_prediction_s=float(pred.mean()), ci95_prediction_s=_ci95(pred),
+        p50_s=float(np.percentile(lat, 50)),
+        p95_s=float(np.percentile(lat, 95)),
+        p99_s=float(np.percentile(lat, 99)),
+        max_s=float(lat.max()),
+        total_cost=float(cost.sum()), mean_cost=float(cost.mean()))
+
+
+def container_seconds(records, keepalive_s: float) -> float:
+    """Platform-side resource usage: busy time + idle keep-alive tails —
+    the provider-cost side of the keep-warm trade-off (paper §5)."""
+    by_container: dict[int, list] = {}
+    for r in records:
+        by_container.setdefault(r.container_id, []).append(r)
+    total = 0.0
+    for rs in by_container.values():
+        rs.sort(key=lambda r: r.start_exec_s)
+        first = min(r.arrival_s for r in rs)
+        last = max(r.end_s for r in rs)
+        busy = sum(r.exec_s for r in rs)
+        total += (last - first) + keepalive_s + busy * 0.0
+    return total

@@ -1,0 +1,77 @@
+"""ServerlessPlatform facade: deploy functions, run workloads, report.
+
+This is the top of the paper's stack: an OpenWhisk/Lambda-style event system
+over the container/scheduler/billing substrate, with the paper's three CNN
+payloads pre-registered and modern ``repro.serving`` handlers attachable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import calibration, metrics, sla
+from repro.core.function import FunctionSpec, Handler
+from repro.core.simulator import Simulator
+from repro.core.workload import cold_probe, step_ramp, warm_burst
+
+
+@dataclasses.dataclass
+class InvocationReport:
+    spec_name: str
+    summary: metrics.Summary
+    warm: metrics.Summary
+    cold: metrics.Summary
+    bimodality: dict
+    cold_starts: int
+
+
+class ServerlessPlatform:
+    def __init__(self, *, seed: int = 0, keepalive_s: float = 480.0,
+                 use_fallback_calibration: bool = False):
+        self.seed = seed
+        self.keepalive_s = keepalive_s
+        self.functions: dict[str, FunctionSpec] = {}
+        self._cal = None if use_fallback_calibration else calibration.calibrate()
+        self._fallback = use_fallback_calibration
+
+    # ------------------------------------------------------------------
+    def deploy_paper_model(self, variant: str, memory_mb: int) -> FunctionSpec:
+        h = calibration.paper_handler(variant, calibrated=self._cal,
+                                      use_fallback=self._fallback)
+        return self.deploy(h, memory_mb)
+
+    def deploy(self, handler: Handler, memory_mb: int) -> FunctionSpec:
+        spec = FunctionSpec(handler=handler, memory_mb=memory_mb)
+        self.functions[spec.name] = spec
+        return spec
+
+    # ------------------------------------------------------------------
+    def invoke(self, spec: FunctionSpec, workload: list,
+               keepalive_s: Optional[float] = None):
+        sim = Simulator(spec, seed=self.seed,
+                        keepalive_s=keepalive_s or self.keepalive_s)
+        records = sim.run(list(workload))
+        kept = [r for r in records if r.tag != "prime"]
+        return kept, sim
+
+    def report(self, spec: FunctionSpec, records, sim) -> InvocationReport:
+        return InvocationReport(
+            spec_name=spec.name,
+            summary=metrics.summarize(records),
+            warm=metrics.summarize(records, warm_only=True),
+            cold=metrics.summarize(records, cold_only=True),
+            bimodality=sla.bimodality_report(records),
+            cold_starts=sim.cold_starts)
+
+    # convenience runs matching the paper's three experiments -----------
+    def run_cold_experiment(self, spec: FunctionSpec):
+        recs, sim = self.invoke(spec, cold_probe())
+        return self.report(spec, recs, sim)
+
+    def run_warm_experiment(self, spec: FunctionSpec):
+        recs, sim = self.invoke(spec, warm_burst())
+        return self.report(spec, recs, sim)
+
+    def run_scalability_experiment(self, spec: FunctionSpec):
+        recs, sim = self.invoke(spec, step_ramp())
+        return self.report(spec, recs, sim)

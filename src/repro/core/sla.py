@@ -1,0 +1,61 @@
+"""SLA analysis — the paper's headline claim (C1):
+
+"while the inferencing latency can be within an acceptable range, longer
+delays due to cold starts can skew the latency distribution and hence risk
+violating more stringent SLAs."
+
+``bimodality_report`` quantifies exactly that skew: warm/cold mode means,
+the cold fraction, and which percentile each SLA bound survives to.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLA:
+    name: str
+    p50_s: float = float("inf")
+    p95_s: float = float("inf")
+    p99_s: float = float("inf")
+
+    def evaluate(self, records) -> dict:
+        lat = np.array([r.response_s for r in records]) if records else np.zeros(1)
+        obs = {"p50": float(np.percentile(lat, 50)),
+               "p95": float(np.percentile(lat, 95)),
+               "p99": float(np.percentile(lat, 99))}
+        violations = {
+            "p50": obs["p50"] > self.p50_s,
+            "p95": obs["p95"] > self.p95_s,
+            "p99": obs["p99"] > self.p99_s,
+        }
+        return {"sla": self.name, "observed": obs,
+                "violations": violations,
+                "ok": not any(violations.values())}
+
+
+# a typical interactive-inference SLA used throughout the benchmarks
+INTERACTIVE = SLA("interactive", p95_s=1.0, p99_s=2.0)
+STRINGENT = SLA("stringent", p95_s=0.5, p99_s=1.0)
+
+
+def bimodality_report(records) -> dict:
+    warm = [r.response_s for r in records if not r.cold]
+    cold = [r.response_s for r in records if r.cold]
+    lat = [r.response_s for r in records]
+    rep = {
+        "n": len(records),
+        "cold_fraction": len(cold) / max(len(records), 1),
+        "warm_mean_s": float(np.mean(warm)) if warm else 0.0,
+        "cold_mean_s": float(np.mean(cold)) if cold else 0.0,
+        "mode_separation": (float(np.mean(cold)) / max(float(np.mean(warm)),
+                                                       1e-9)) if cold and warm else 0.0,
+    }
+    if lat:
+        rep["p50_s"] = float(np.percentile(lat, 50))
+        rep["p99_s"] = float(np.percentile(lat, 99))
+        # the paper's point: p99 >> p50 exactly when colds are present
+        rep["p99_over_p50"] = rep["p99_s"] / max(rep["p50_s"], 1e-9)
+    return rep

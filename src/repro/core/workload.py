@@ -1,0 +1,68 @@
+"""JMeter-style workload generators (paper §3.1 / §3.4, Fig 7).
+
+Each generator yields (arrival_time_s, request_id) pairs — deterministic
+given the seed, matching the paper's measurement scripts:
+
+  * cold_probe:  5 sequential requests separated by 10 minutes (forces cold).
+  * warm_burst:  1 discarded priming request, then 25 requests at 1 s spacing.
+  * step_ramp:   10 parallel requests, +10 req/s each second for 10 s (Fig 7).
+  * poisson:     open-loop Poisson arrivals (beyond-paper, for SLA studies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    arrival_s: float
+    tag: str = ""
+
+
+def cold_probe(n: int = 5, gap_s: float = 600.0) -> list:
+    return [Request(i, i * gap_s, "cold_probe") for i in range(n)]
+
+
+def warm_burst(n: int = 25, interval_s: float = 1.0,
+               prime: bool = True) -> list:
+    reqs = []
+    rid = 0
+    t = 0.0
+    if prime:
+        reqs.append(Request(rid, 0.0, "prime"))
+        rid += 1
+        t = 5.0  # wait for the priming request to finish
+    for i in range(n):
+        reqs.append(Request(rid, t + i * interval_s, "warm"))
+        rid += 1
+    return reqs
+
+
+def step_ramp(start_rps: int = 10, step_rps: int = 10,
+              duration_s: int = 10) -> list:
+    """Paper Fig 7: second t carries (start + t*step) concurrent requests."""
+    reqs = []
+    rid = 0
+    for sec in range(duration_s):
+        rate = start_rps + sec * step_rps
+        for k in range(rate):
+            # requests within the second spread uniformly (JMeter burst)
+            reqs.append(Request(rid, sec + k / max(rate, 1), "ramp"))
+            rid += 1
+    return reqs
+
+
+def poisson(rate_rps: float, duration_s: float, seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    t, rid, reqs = 0.0, 0, []
+    while True:
+        t += rng.exponential(1.0 / rate_rps)
+        if t >= duration_s:
+            break
+        reqs.append(Request(rid, float(t), "poisson"))
+        rid += 1
+    return reqs

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the flash prefill kernel (pads odd lengths)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.attention.flash import BK, BQ, flash_attention as _fa
+
+
+def flash_attention(q, k, v, *, window: int = 0, interpret: bool = False):
+    s = q.shape[1]
+    bq = min(BQ, s)
+    bk = min(BK, s)
+    pad = (-s) % max(bq, bk)
+    if pad:
+        padc = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        out = _fa(jnp.pad(q, padc), jnp.pad(k, padc), jnp.pad(v, padc),
+                  window=window, bq=bq, bk=bk, interpret=interpret)
+        return out[:, :s]
+    return _fa(q, k, v, window=window, bq=bq, bk=bk, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the flash prefill kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import causal_window_mask, sdpa
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0):
+    s = q.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    return sdpa(q, k, v, causal_window_mask(pos, pos, window))

@@ -1,0 +1,92 @@
+"""Flash-decode kernel (TPU Pallas): one new token against a long KV cache.
+
+Decode attention is an HBM-bandwidth sweep over the cache (decode_32k /
+long_500k are memory-bound in the roofline table); this kernel streams the
+cache in (BK, hd) VMEM tiles along a sequential grid axis, keeping the
+online-softmax partials (m, l, acc) in VMEM scratch — the two-pass combine
+collapses into one pass because the query is a single row per head.
+
+A boolean validity vector masks ring-buffer slots / positions beyond `pos`
+(the caller encodes causal + window validity there).
+
+Grid: (B, H, S/BK), KV axis innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, 0, :].astype(jnp.float32)            # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    valid = valid_ref[0, :]                              # (bk,) bool
+
+    s = jnp.sum(k * q[None, :], axis=1) * scale          # (bk,)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)                               # (bk,)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p)
+    acc_ref[0, :] = acc_ref[0, :] * alpha + jnp.sum(p[:, None] * v, axis=0)
+    m_ref[0, 0] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0, 0, :] = (acc_ref[0, :] /
+                             jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode(q, cache_k, cache_v, valid, *, bk: int = BK,
+                 interpret: bool = False):
+    """q: (B,1,H,hd); cache_k/v: (B,S,K,hd); valid: (S,) bool."""
+    b, _, h, hd = q.shape
+    s, kh = cache_k.shape[1], cache_k.shape[2]
+    g = h // kh
+    bk = min(bk, s)
+    assert s % bk == 0, (s, bk)
+    nk = s // bk
+    scale = hd ** -0.5
+    valid2 = valid[None, :].astype(jnp.bool_)            # (1, S) blockable
+
+    kernel = functools.partial(_kernel, scale=scale, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda bi, hi, ki: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, ki: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda bi, hi, ki: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, bk), lambda bi, hi, ki: (0, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda bi, hi, ki: (bi, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, cache_k, cache_v, valid2)

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for flash-decode (pads the cache to the block size)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode.flash_decode import BK, flash_decode as _fd
+
+
+def flash_decode(q, cache_k, cache_v, valid, *, interpret: bool = False):
+    s = cache_k.shape[1]
+    bk = min(BK, s)
+    pad = (-s) % bk
+    if pad:
+        padc = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        cache_k = jnp.pad(cache_k, padc)
+        cache_v = jnp.pad(cache_v, padc)
+        valid = jnp.pad(valid, (0, pad))
+    return _fd(q, cache_k, cache_v, valid, bk=bk, interpret=interpret)

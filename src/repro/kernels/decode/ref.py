@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+from repro.models.layers import sdpa
+
+
+def flash_decode_ref(q, cache_k, cache_v, valid):
+    """q: (B,1,H,hd); cache: (B,S,K,hd); valid: (S,) bool."""
+    return sdpa(q, cache_k, cache_v, valid[None, None, :])

@@ -1,0 +1,47 @@
+"""Kernel dispatch: route hot-spot ops to Pallas kernels or pure-jnp refs.
+
+Selection: env var ``REPRO_PALLAS``:
+  * ``"0"`` / unset  -> pure-jnp reference paths (default on CPU; XLA fuses these)
+  * ``"1"``          -> Pallas kernels (TPU; or interpret mode if no TPU present)
+
+Individual ops can be forced with ``REPRO_PALLAS_OPS="attention,decode,rwkv"``.
+"""
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+
+import jax
+
+
+@lru_cache(maxsize=None)
+def _enabled_ops() -> frozenset:
+    if os.environ.get("REPRO_PALLAS", "0") != "1":
+        ops = os.environ.get("REPRO_PALLAS_OPS", "")
+        return frozenset(o for o in ops.split(",") if o)
+    return frozenset({"attention", "decode", "rwkv"})
+
+
+def use_pallas(op: str) -> bool:
+    return op in _enabled_ops()
+
+
+@lru_cache(maxsize=None)
+def interpret_mode() -> bool:
+    """Pallas interpret=True when not on real TPU hardware."""
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, window: int = 0):
+    from repro.kernels.attention import ops
+    return ops.flash_attention(q, k, v, window=window, interpret=interpret_mode())
+
+
+def flash_decode(q, cache_k, cache_v, valid):
+    from repro.kernels.decode import ops
+    return ops.flash_decode(q, cache_k, cache_v, valid, interpret=interpret_mode())
+
+
+def rwkv_scan(r, k, v, w, u, state):
+    from repro.kernels.rwkv import ops
+    return ops.wkv6(r, k, v, w, u, state, interpret=interpret_mode())

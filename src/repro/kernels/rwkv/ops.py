@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the WKV-6 kernel (pads T to the chunk size)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rwkv.wkv import CHUNK, wkv6 as _wkv6
+
+
+def wkv6(r, k, v, w, u, s0, *, interpret: bool = False):
+    t = r.shape[1]
+    chunk = min(CHUNK, t)
+    pad = (-t) % chunk
+    if pad:
+        padc = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        # pad with w=1 (identity decay) and k=0 so the state is unchanged
+        r2, k2, v2 = (jnp.pad(x, padc) for x in (r, k, v))
+        w2 = jnp.pad(w, padc, constant_values=1.0)
+        o, s = _wkv6(r2, k2, v2, w2, u, s0, chunk=chunk, interpret=interpret)
+        return o[:, :t], s
+    return _wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=interpret)

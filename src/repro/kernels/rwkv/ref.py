@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the WKV-6 kernel: the model's own lax.scan recurrence."""
+from __future__ import annotations
+
+from repro.models.ssm import wkv_ref
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    return wkv_ref(r, k, v, w, u, s0)

@@ -1,0 +1,86 @@
+"""RWKV-6 WKV recurrence kernel (TPU Pallas).
+
+The recurrence S_t = diag(w_t) S_{t-1} + k_t (outer) v_t is sequential in t,
+but its operands are tiny: the (hd, hd) matrix state lives in VMEM scratch
+for the whole sweep while (r,k,v,w) stream through VMEM in (CHUNK, hd) tiles
+along the sequential chunk grid axis.  HBM traffic is therefore O(T*hd) in
+and O(T*hd) out — the state never round-trips to HBM (the pure-jnp scan
+carries it through HBM every step).  Within a chunk the steps run on the
+VPU/MXU over VMEM-resident tiles.
+
+Grid: (B, H, T/CHUNK); chunk axis sequential ("arbitrary").
+Outputs: per-token o (B,T,H,hd) and the final state (B,H,hd,hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
+            state, *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                      # (hd,)
+
+    def step(t, _):
+        rt = r_ref[0, t, 0, :].astype(jnp.float32)        # (hd,)
+        kt = k_ref[0, t, 0, :].astype(jnp.float32)
+        vt = v_ref[0, t, 0, :].astype(jnp.float32)
+        wt = w_ref[0, t, 0, :].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                    # (hd, hd)
+        o = jnp.sum((state[...] + u[:, None] * kv) * rt[:, None], axis=0)
+        o_ref[0, t, 0, :] = o.astype(o_ref.dtype)
+        state[...] = wt[:, None] * state[...] + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sout_ref[0, 0] = state[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, s0, *, chunk: int = CHUNK, interpret: bool = False):
+    """r,k,v,w: (B,T,H,hd) fp32; u: (H,hd); s0: (B,H,hd,hd).
+    Returns (o (B,T,H,hd), final_state (B,H,hd,hd))."""
+    b, t, h, hd = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, nc=nc)
+    seq_spec = pl.BlockSpec((1, chunk, 1, hd), lambda bi, hi, ci: (bi, ci, hi, 0))
+    o, sout = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hd), lambda bi, hi, ci: (hi, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, hd, hd), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return o, sout

@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" \
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+The two lines above run before ANY other import (jax locks the device count on
+first init).  512 host-platform placeholder devices cover both the single-pod
+(16,16)=256 mesh and the multi-pod (2,16,16)=512 mesh.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each run writes ``<out>/<arch>__<shape>__<mesh>.json`` containing
+memory_analysis, cost_analysis, per-kind collective bytes, and the roofline
+terms — read later by repro.analysis.roofline and benchmarks.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo as hlo_lib
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.launch import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (choose_microbatch, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import api
+from repro.train.optimizer import AdamW
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {k: int(getattr(m, k)) for k in keys if hasattr(m, k)}
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0) + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0) - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _cost_stats(compiled) -> dict:
+    try:
+        c = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return {k: float(v) for k, v in c.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower())}
+
+
+def loop_trips(cfg, kind: str, seq_len: int, num_micro: int = 1) -> tuple:
+    """Structurally-known scan trip counts (outermost first) for weighting
+    collectives/dots that sit inside HLO while bodies (see analysis/hlo.py).
+    Train nesting: microbatch scan -> layer scan -> chunk/time scan."""
+    if cfg.family == "hybrid":
+        layers = max(cfg.num_layers // max(len(cfg.pattern), 1), 1)
+    else:
+        layers = max(cfg.num_layers, 1)
+    micro_seq = seq_len  # per-microbatch seq unchanged (we split batch)
+    if kind == "decode":
+        inner = 1
+    elif cfg.family == "ssm":
+        inner = micro_seq          # time scan
+    elif micro_seq > 2048:
+        inner = micro_seq // 1024  # chunked-attention scan
+    else:
+        inner = 1
+    if cfg.family == "ssm" and kind == "prefill" and seq_len > 8192:
+        # chunked stateful prefill: chunk scan -> layer scan -> time scan
+        return (seq_len // 8192, layers, 8192)
+    if kind == "train" and num_micro > 1:
+        return (num_micro, layers, inner)
+    return (layers, inner)
+
+
+def lower_pair(arch_id: str, shape_id: str, *, multi_pod: bool, mesh=None,
+               int8: bool = False):
+    """Build + lower the step function for one pair.  Returns (lowered, meta)."""
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    kind, cfg, kw = registry.input_specs(arch_id, shape_id)
+    abs_params = api.abstract_params(cfg)
+    dequant = None
+    if int8 and kind in ("prefill", "decode"):
+        from repro.serving import quantize as qz
+        abs_params = jax.eval_shape(lambda p: qz.quantize_params(p)[0],
+                                    abs_params)
+        dequant = lambda p: qz.dequantize_params(p, dtype=cfg.cdt)
+    from repro.launch.mesh import axis_size, data_axes, model_axis
+    dp = axis_size(mesh, data_axes(mesh))
+    msz = axis_size(mesh, model_axis(mesh))
+    # FSDP: weights (+moments) shard over the data axis too whenever the
+    # model-parallel shard alone would blow the 16 GB v5e HBM budget.
+    param_gb = cfg.param_count() * 2 / max(msz, 1) / 1e9
+    fsdp = kind == "train" or param_gb > 4.0
+    # Small-model PREFILL: TP=16 on a <4 GB model trades tiny per-chip
+    # matmuls for full-size activation all-reduces (rwkv6 prefill: 3.3 s
+    # collective vs 0.06 s compute).  Replicate the weights instead — pure
+    # data parallelism, zero collectives.  Decode stays TP: there the
+    # recurrent state / KV dominates and model-sharding it cuts the HBM
+    # sweep 16x (replicating regressed decode 10-15x when measured).
+    # EXPERIMENTS.md §Perf F.
+    replicate = (kind == "prefill" and not cfg.is_moe
+                 and cfg.param_count() * 2 / 1e9 < 4.0)
+    meta_extra = {"replicated_weights": replicate}
+    if replicate:
+        from jax.sharding import PartitionSpec as _P
+        pspecs = jax.tree_util.tree_map(lambda _: _P(), abs_params)
+    else:
+        pspecs = sharding.param_pspecs(abs_params, cfg, mesh, fsdp=fsdp)
+    p_sh = sharding.to_named(pspecs, mesh)
+    meta = {"arch": arch_id, "shape": shape_id, "kind": kind,
+            "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+            "n_devices": int(mesh.devices.size), "fsdp": fsdp, "int8": int8,
+            **meta_extra}
+
+    def _wrap(step):
+        if dequant is None:
+            return step
+        return lambda params, *a: step(dequant(params), *a)
+
+    if kind == "train":
+        opt = AdamW()
+        abs_opt = jax.eval_shape(opt.init, abs_params)
+        ospecs = sharding.opt_pspecs(abs_opt, pspecs)
+        b_sh = sharding.to_named(sharding.input_pspecs(kw, mesh), mesh)
+        shp = SHAPES[shape_id]
+        num_micro = choose_microbatch(cfg, shp.global_batch, shp.seq_len, dp)
+        meta["num_micro"] = num_micro
+        step = make_train_step(cfg, opt, num_micro=num_micro, mesh=mesh,
+                               param_pspecs=pspecs)
+        jitted = jax.jit(step, in_shardings=(
+            p_sh, sharding.to_named(ospecs, mesh), b_sh),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(abs_params, abs_opt, kw)
+    elif kind == "prefill":
+        b_sh = sharding.to_named(sharding.input_pspecs(kw, mesh), mesh)
+        shp = SHAPES[shape_id]
+        abs_out = jax.eval_shape(_wrap(make_prefill_step(cfg)), abs_params, kw)
+        cache_sp = sharding.cache_pspecs(abs_out[1], cfg, mesh,
+                                         batch=shp.global_batch,
+                                         use_model=not replicate)
+        out_sh = (sharding.to_named(
+            sharding.batch_pspec(abs_out[0].shape, mesh), mesh),
+            sharding.to_named(cache_sp, mesh))
+        step = _wrap(make_prefill_step(cfg))
+        lowered = jax.jit(step, in_shardings=(p_sh, b_sh),
+                          out_shardings=out_sh).lower(abs_params, kw)
+    elif kind == "decode":
+        batch = kw["token"].shape[0]
+        cache_sp = sharding.cache_pspecs(kw["cache"], cfg, mesh, batch=batch,
+                                         use_model=not replicate)
+        c_sh = sharding.to_named(cache_sp, mesh)
+        t_sh = sharding.to_named(
+            sharding.batch_pspec(kw["token"].shape, mesh), mesh)
+        s_sh = NamedSharding(mesh, P())
+        step = _wrap(make_serve_step(cfg))
+        abs_out = jax.eval_shape(step, abs_params, kw["cache"], kw["token"],
+                                 kw["pos"])
+        out_sh = (sharding.to_named(
+            sharding.batch_pspec(abs_out[0].shape, mesh), mesh), c_sh)
+        lowered = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, s_sh),
+                          out_shardings=out_sh,
+                          donate_argnums=(1,)).lower(
+            abs_params, kw["cache"], kw["token"], kw["pos"])
+    else:  # cnn predict
+        from repro.models import cnn as cnn_lib
+        img_sh = sharding.to_named(
+            sharding.batch_pspec(kw["images"].shape, mesh), mesh)
+        step = lambda params, images: cnn_lib.predict(params, images, cfg)
+        lowered = jax.jit(step, in_shardings=(p_sh, img_sh)).lower(
+            abs_params, kw["images"])
+    return lowered, meta, cfg
+
+
+def run_pair(arch_id: str, shape_id: str, *, multi_pod: bool, out_dir: str,
+             verbose: bool = True, mesh=None, seq_parallel: bool = False,
+             int8: bool = False) -> dict:
+    from repro import shardctx
+    t0 = time.time()
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    with shardctx.use_mesh(mesh, seq_parallel=seq_parallel):
+        lowered, meta, cfg = lower_pair(arch_id, shape_id, multi_pod=multi_pod,
+                                        mesh=mesh, int8=int8)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_stats(compiled)
+    cost = _cost_stats(compiled)
+    try:
+        hlo_text = compiled.as_text()
+    except Exception:
+        hlo_text = lowered.as_text()
+    trips = loop_trips(cfg, meta["kind"], SHAPES[shape_id].seq_len,
+                       meta.get("num_micro", 1))
+    analysis = hlo_lib.analyze(hlo_text, loop_trips=trips)
+    coll = analysis["collectives"]
+
+    from repro.analysis.roofline import roofline_terms
+    terms = roofline_terms(cfg, meta, analysis, cost)
+
+    rec = {**meta, "multi_pod": multi_pod, "loop_trips": list(trips),
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+           "memory": mem, "cost": cost, "collectives": coll,
+           "hlo_flops_per_chip": analysis["flops_per_chip"],
+           "hlo_traffic_per_chip": analysis["traffic_per_chip"],
+           "op_histogram": analysis["op_histogram"][:12],
+           "roofline": terms}
+    if verbose:
+        print(f"[dryrun] {arch_id} x {shape_id} mesh={meta['mesh']} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print("  memory_analysis:", json.dumps(mem))
+        print("  hlo: flops/chip=%.3e traffic/chip=%.3e" %
+              (analysis["flops_per_chip"], analysis["traffic_per_chip"]))
+        print("  collectives:", json.dumps({k: v for k, v in coll.items()
+                                            if k != "counts"}))
+        print("  roofline:", json.dumps(terms))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = ("multi" if multi_pod else "single") + ("_int8" if int8 else "")
+        path = os.path.join(out_dir, f"{arch_id}__{shape_id}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--int8", action="store_true",
+                    help="weight-only int8 ablation (prefill/decode kinds)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="shard the sequence dim of activations over 'model' "
+                         "between blocks (Megatron sequence parallelism)")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = registry.pairs()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for aid, sid in todo:
+        tag = ("multi" if args.multi_pod else "single") + ("_int8" if args.int8 else "")
+        path = os.path.join(args.out, f"{aid}__{sid}__{tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] skip existing {aid} x {sid} ({tag})")
+            continue
+        try:
+            run_pair(aid, sid, multi_pod=args.multi_pod, out_dir=args.out,
+                     seq_parallel=args.seq_parallel, int8=args.int8)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((aid, sid, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"[dryrun] all {len(todo)} pair(s) compiled OK "
+          f"({'multi' if args.multi_pod else 'single'}-pod mesh)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Parameter / activation PartitionSpec rules for every family.
+
+Megatron-style tensor parallelism on the ``model`` axis, batch parallelism on
+``("pod", "data")``.  Rules are path-based over the param pytree; a dim is only
+sharded when it divides the axis size evenly (GSPMD correctness over padding).
+
+MoE experts: expert-parallel over ``model`` when num_experts divides the axis
+(qwen3: 128/16=8), otherwise tensor-parallel on the per-expert ffn dim
+(granite: 40 experts -> shard d_ff=512 16-way).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, data_axes, model_axis
+from repro.models.common import ModelConfig
+
+COL = {"wq", "wk", "wv", "wi", "wu", "wg", "wr", "w_in", "mix_w1"}
+ROW = {"wo", "wd", "w_out"}
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+def _spec_for(path: tuple, shape: tuple, cfg: ModelConfig, mesh) -> P:
+    keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    m = model_axis(mesh)
+    msz = axis_size(mesh, m)
+    if m is None or msz == 1:
+        return P()
+    # int8-quantized leaves ({"q": int8, "scale": f32} under the weight key):
+    # the q tensor shards like the original weight; scales are tiny/replicated
+    if len(keys) >= 2 and keys[-1] in ("q", "scale") and (
+            keys[-2] in COL | ROW | {"wi", "wu", "wd", "embedding"}
+            or (len(keys) >= 3 and keys[-2] == "w")):
+        if keys[-1] == "scale":
+            return P()
+        keys = keys[:-1]
+    name = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    gparent = keys[-3] if len(keys) >= 3 else ""
+
+    def col(dim_idx: int) -> P:
+        if _div(shape[dim_idx], msz):
+            spec = [None] * len(shape)
+            spec[dim_idx] = m
+            return P(*spec)
+        return P()
+
+    # embeddings
+    if name == "embedding":
+        return col(len(shape) - 2)  # (V, d) -> vocab sharded
+    if parent == "unembed" and name == "w":
+        return col(len(shape) - 1)
+    if name == "dec_pos":
+        return P()
+
+    # MoE experts: (E, d, f) / (E, f, d) — stacked under layers => rank 4
+    if parent == "moe" or gparent == "moe":
+        if name == "router":
+            return P()
+        e_idx = len(shape) - 3
+        if name in ("wi", "wu", "wd"):
+            if _div(shape[e_idx], msz):
+                spec = [None] * len(shape)
+                spec[e_idx] = m
+                return P(*spec)   # expert-parallel
+            if name in ("wi", "wu"):
+                return col(len(shape) - 1)   # TP on ffn dim
+            return col(len(shape) - 2)       # wd: (E, f, d) -> shard f
+    if name == "router":
+        return P()
+
+    # generic matmul weights (dicts {"w": ..., "b": ...})
+    if name == "w":
+        if parent in COL:
+            return col(len(shape) - 1)
+        if parent in ROW:
+            return col(len(shape) - 2)
+        return P()
+    if name == "b":
+        if parent in COL:
+            return col(len(shape) - 1)
+        return P()
+
+    # direct (non-dict) weights
+    if name in ("wi", "wu") or name in COL:
+        return col(len(shape) - 1)
+    if name in ("wd",) or name in ROW:
+        return col(len(shape) - 2)
+
+    # rwkv / hybrid specifics
+    if name == "u":                       # (H, hd) or (L, H, hd)
+        return col(len(shape) - 2)
+    if name in ("conv_w",):               # (width, dr) stacked -> last dim
+        return col(len(shape) - 1)
+    if name in ("conv_b", "lam"):
+        return col(len(shape) - 1)
+    if parent in ("wa", "wx") and name == "w":
+        return col(len(shape) - 1)
+
+    return P()  # norms, scalars, lora adapters, positions: replicated
+
+
+def _add_fsdp(spec: P, shape: tuple, mesh) -> P:
+    """Shard the largest still-unsharded dim of a >=2D weight over "data"
+    (ZeRO/FSDP: weights+moments sharded over the data axis, all-gathered
+    per layer inside the scan).  1D/scalar leaves stay replicated."""
+    if len(shape) < 2:
+        return spec
+    dsz = mesh.shape.get("data", 1)
+    if dsz <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    cands = [i for i, e in enumerate(entries)
+             if e is None and _div(shape[i], dsz)]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda i: shape[i])
+    entries[best] = "data"
+    return P(*entries)
+
+
+def param_pspecs(abs_params, cfg: ModelConfig, mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree matching the (abstract) param tree."""
+    def assign(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.shape == ():
+            return P()
+        spec = _spec_for(path, leaf.shape, cfg, mesh)
+        if fsdp:
+            spec = _add_fsdp(spec, leaf.shape, mesh)
+        return spec
+    return jax.tree_util.tree_map_with_path(assign, abs_params)
+
+
+def _pathkey(path) -> tuple:
+    return tuple(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+
+
+def opt_pspecs(abs_opt, param_specs):
+    """Optimizer moments shard exactly like their parameters.
+    The opt tree is {"mu": <params>, "nu": <params>, "step": ()}."""
+    flat_specs = {_pathkey(p): s for p, s in
+                  jax.tree_util.tree_flatten_with_path(
+                      param_specs, is_leaf=lambda x: isinstance(x, P))[0]}
+
+    def assign(path, leaf):
+        if leaf is None or not hasattr(leaf, "shape") or leaf.shape == ():
+            return P()
+        keys = _pathkey(path)
+        if keys and keys[0] in ("mu", "nu"):
+            return flat_specs.get(keys[1:], P())
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, abs_opt,
+                                            is_leaf=lambda x: x is None)
+
+
+# ----------------------------------------------------------------------
+# activations / inputs
+# ----------------------------------------------------------------------
+
+def batch_pspec(shape: tuple, mesh, *, batch_dim: int = 0) -> P:
+    """Shard the batch dim over ("pod","data") when divisible, else replicate."""
+    dax = data_axes(mesh)
+    spec = [None] * len(shape)
+    if dax and _div(shape[batch_dim], axis_size(mesh, dax)):
+        spec[batch_dim] = dax if len(dax) > 1 else dax[0]
+    return P(*spec)
+
+
+def input_pspecs(input_tree, mesh):
+    """Specs for a dict of (token/label/embedding) inputs: batch-shard dim 0."""
+    return jax.tree_util.tree_map(
+        lambda x: batch_pspec(x.shape, mesh) if hasattr(x, "shape") and x.shape
+        else P(), input_tree)
+
+
+def cache_pspecs(cache_tree, cfg: ModelConfig, mesh, *, batch: int,
+                 use_model: bool = True):
+    """Decode cache sharding.  Batch shards over data axes when divisible;
+    for batch=1 (long_500k) the long KV sequence dim shards over "data"
+    instead, and head-like dims shard over "model" when divisible.  With
+    ``use_model=False`` (replicated-weights small-model path) the cache is
+    replicated over the model axis too, matching the compute layout."""
+    dax = data_axes(mesh)
+    dsz = axis_size(mesh, dax)
+    m = model_axis(mesh) if use_model else None
+    msz = axis_size(mesh, m) if use_model else 1
+    batch_ok = _div(batch, dsz)
+    dspec = dax if len(dax) > 1 else (dax[0] if dax else None)
+
+    def assign(path, leaf):
+        keys = tuple(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+        shape = leaf.shape
+        name = keys[-1] if keys else ""
+        spec = [None] * len(shape)
+        # locate batch dim: rank-N stacked caches have B at idx 1 (after L/U),
+        # unstacked ("extra") states have B at idx 0.
+        b_idx = 1 if (len(shape) >= 2 and shape[0] != batch and batch in shape[:2]
+                      and shape[1] == batch) else 0
+        if shape and shape[b_idx] == batch and batch_ok:
+            spec[b_idx] = dspec
+        if name in ("k", "v", "xk", "xv") and len(shape) >= 4:
+            s_idx = b_idx + 1
+            h_idx = b_idx + 2
+            heads_shardable = _div(shape[h_idx], msz)
+            seq_axes = []
+            if not (batch_ok and dsz > 1) and _div(shape[s_idx], dsz):
+                seq_axes.extend(dax)                    # long-KV: seq over data
+            if heads_shardable:
+                spec[h_idx] = m                         # kv heads over model
+            elif (m is not None and cfg.attention_window == 0
+                  and _div(shape[s_idx],
+                           msz * max(axis_size(mesh, tuple(seq_axes)), 1))):
+                # GQA kv-heads don't divide the model axis: shard the KV
+                # sequence dim over "model" instead — decode attention then
+                # reduces over the sharded seq with small partial-softmax
+                # all-reduces instead of all-gathering the cache.  Skipped
+                # for sliding-window caches: the dynamic window slice over a
+                # model-sharded seq dim degrades into gathers (measured 10x
+                # WORSE on long_500k — see EXPERIMENTS.md §Perf).
+                seq_axes.append(m)
+            if seq_axes:
+                spec[s_idx] = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+        if name == "wkv" and len(shape) == 5:           # (L,B,H,hd,hd)
+            if _div(shape[2], msz):
+                spec[2] = m
+        if name in ("shift_t", "shift_c", "lru") and _div(shape[-1], msz):
+            spec[-1] = m
+        if name == "conv" and _div(shape[-1], msz):
+            spec[-1] = m
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_tree)
+
+
+def to_named(spec_tree, mesh):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,110 @@
+"""Step-function builders: the exact functions that get pjit'd + lowered."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.common import ModelConfig
+from repro.train.optimizer import AdamW
+
+
+def choose_microbatch(cfg: ModelConfig, global_batch: int, seq: int,
+                      dp_size: int, target_bytes: float = 4e9) -> int:
+    """Gradient-accumulation split so the per-device footprint of (a) the
+    scan-carry activations (local_micro * S * d * 2B * L) and (b) the fp32
+    logits+softmax buffers (local_micro * S * V * 4B * ~3) stays under
+    ``target_bytes`` — (b) dominates for small-d/large-V models (whisper)."""
+    local_b = max(global_batch // max(dp_size, 1), 1)
+    act = local_b * seq * cfg.d_model * 2 * max(cfg.num_layers, 1)
+    logits = local_b * seq * max(cfg.vocab_size, 1) * 4 * 3
+    need = max(act, logits)
+    n = 1
+    while need / n > target_bytes and n < local_b:
+        n *= 2
+    return n
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, *, num_micro: int = 1,
+                    mesh=None, param_pspecs=None):
+    """One optimizer step; gradients accumulate in fp32 (sharded like params)
+    over ``num_micro`` microbatches via jax.lax.scan.
+
+    The microbatch reshape (B,) -> (n, B/n) must keep the *batch-within-micro*
+    dim sharded over the data axes — without an explicit constraint GSPMD may
+    shard the scan axis instead, which serialises data parallelism."""
+
+    def loss_fn(p, mb):
+        return api.train_loss(p, mb, cfg)
+
+    def _constrain_micro(tree):
+        if mesh is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import data_axes
+        dax = data_axes(mesh)
+        dspec = dax if len(dax) > 1 else (dax[0] if dax else None)
+
+        def con(x):
+            spec = [None] * x.ndim
+            if x.ndim >= 2 and dspec is not None \
+                    and x.shape[1] % max(mesh.shape.get("data", 1), 1) == 0:
+                spec[1] = dspec
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+        return jax.tree_util.tree_map(con, tree)
+
+    def train_step(params, opt_state, batch):
+        if num_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(num_micro, x.shape[0] // num_micro,
+                                    *x.shape[1:]), batch)
+            micro = _constrain_micro(micro)
+            def _constrain_grads(tree):
+                """Keep the fp32 accumulator sharded exactly like the params
+                (ZeRO): otherwise GSPMD may replicate it over data and emit
+                all-reduces instead of reduce-scatters per microbatch."""
+                if mesh is None or param_pspecs is None:
+                    return tree
+                from jax.sharding import NamedSharding
+                return jax.tree_util.tree_map(
+                    lambda x, s: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, s)),
+                    tree, param_pspecs)
+
+            zeros = _constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                g_acc = _constrain_grads(g_acc)
+                return (g_acc, l_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / num_micro, grads)
+            loss = loss_sum / num_micro
+            metrics = {"xent": loss, "aux": jnp.zeros(())}
+        params2, opt2, om = opt.update(params, grads, opt_state)
+        return params2, opt2, {**metrics, **om, "loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, inputs):
+        return api.prefill(params, inputs, cfg)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(params, cache, token, pos, cfg)
+    return serve_step

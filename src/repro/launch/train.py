@@ -1,0 +1,52 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --smoke \
+        --steps 50 --batch 8 --seq 64
+
+Full (non-smoke) configs require real accelerators; on this host use --smoke
+(reduced same-family variant) — the distribution path is identical and the
+production mesh is exercised by repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get
+    from repro.launch.mesh import make_local_mesh
+    from repro.train.loop import train
+
+    spec = get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    mesh = None
+    if args.data_par * args.model_par > 1:
+        mesh = make_local_mesh(args.data_par, args.model_par)
+    print(f"[train] {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size} devices={jax.device_count()}")
+    rep = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                lr=args.lr, mesh=mesh, num_micro=args.micro,
+                ckpt_path=args.ckpt)
+    print(f"[train] {rep.params_m:.1f}M params; loss "
+          f"{rep.initial_loss:.4f} -> {rep.final_loss:.4f} "
+          f"({rep.steps} steps, {rep.wall_s:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""The paper's three MXNet image-classification models, in pure JAX:
+
+  * SqueezeNet v1.0  (arXiv:1602.07360)  — ~5 MB of weights
+  * ResNet-18        (arXiv:1512.03385)  — ~45 MB
+  * ResNeXt-50 32x4d (arXiv:1611.05431)  — ~98 MB
+
+These are the actual serverless *payloads* in the reproduction: the platform
+calibration (``repro.core.calibration``) runs real forward passes of these
+models on CPU, exactly as the paper runs MXNet forward passes inside Lambda.
+BatchNorm is folded to inference-mode scale/shift (the paper only serves).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+
+
+def _conv_init(rng, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32)
+    return (w * math.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def conv2d(w, x, stride=1, padding="SAME", groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def bn(p, x):
+    return x * p["scale"] + p["bias"]
+
+
+def maxpool(x, k, s):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def avgpool_global(x):
+    return x.mean(axis=(1, 2))
+
+
+# ======================================================================
+# SqueezeNet v1.0
+# ======================================================================
+
+_FIRE = [  # (squeeze, expand1x1, expand3x3) per fire module; pool after idx 2,6
+    (16, 64, 64), (16, 64, 64), (32, 128, 128), (32, 128, 128),
+    (48, 192, 192), (48, 192, 192), (64, 256, 256), (64, 256, 256),
+]
+
+
+def squeezenet_init(rng, num_classes=1000):
+    r = iter(jax.random.split(rng, 64))
+    p = {"conv1": _conv_init(next(r), 7, 7, 3, 96)}
+    cin = 96
+    fires = []
+    for (sq, e1, e3) in _FIRE:
+        fires.append({
+            "squeeze": _conv_init(next(r), 1, 1, cin, sq),
+            "e1": _conv_init(next(r), 1, 1, sq, e1),
+            "e3": _conv_init(next(r), 3, 3, sq, e3),
+        })
+        cin = e1 + e3
+    p["fires"] = fires
+    p["conv_final"] = _conv_init(next(r), 1, 1, cin, num_classes)
+    return p
+
+
+def _fire(p, x):
+    s = jax.nn.relu(conv2d(p["squeeze"], x))
+    return jnp.concatenate(
+        [jax.nn.relu(conv2d(p["e1"], s)), jax.nn.relu(conv2d(p["e3"], s))], -1)
+
+
+def squeezenet_forward(p, images):
+    x = jax.nn.relu(conv2d(p["conv1"], images, stride=2, padding="VALID"))
+    x = maxpool(x, 3, 2)
+    for i, f in enumerate(p["fires"]):
+        x = _fire(f, x)
+        if i in (2, 6):
+            x = maxpool(x, 3, 2)
+    x = jax.nn.relu(conv2d(p["conv_final"], x))
+    return avgpool_global(x)
+
+
+# ======================================================================
+# ResNet-18 / ResNeXt-50
+# ======================================================================
+
+def _basic_block_init(rng, cin, cout, stride):
+    r = jax.random.split(rng, 3)
+    p = {"conv1": _conv_init(r[0], 3, 3, cin, cout), "bn1": _bn_init(cout),
+         "conv2": _conv_init(r[1], 3, 3, cout, cout), "bn2": _bn_init(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(r[2], 1, 1, cin, cout)
+        p["bnp"] = _bn_init(cout)
+    return p
+
+
+def _basic_block(p, x, s):
+    y = jax.nn.relu(bn(p["bn1"], conv2d(p["conv1"], x, stride=s)))
+    y = bn(p["bn2"], conv2d(p["conv2"], y))
+    sc = bn(p["bnp"], conv2d(p["proj"], x, stride=s)) if "proj" in p else x
+    return jax.nn.relu(y + sc)
+
+
+def resnet18_init(rng, num_classes=1000):
+    r = iter(jax.random.split(rng, 64))
+    p = {"conv1": _conv_init(next(r), 7, 7, 3, 64), "bn1": _bn_init(64)}
+    blocks, cin = [], 64
+    for stage, cout in enumerate([64, 128, 256, 512]):
+        for b in range(2):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            blocks.append(_basic_block_init(next(r), cin, cout, stride))
+            cin = cout
+    p["blocks"] = blocks
+    p["fc"] = {"w": (jax.random.normal(next(r), (512, num_classes), jnp.float32)
+                     / math.sqrt(512))}
+    return p
+
+
+def _resnet18_strides():
+    out = []
+    for stage in range(4):
+        for b in range(2):
+            out.append(2 if (stage > 0 and b == 0) else 1)
+    return out
+
+
+def resnet18_forward(p, images):
+    x = jax.nn.relu(bn(p["bn1"], conv2d(p["conv1"], images, stride=2)))
+    x = maxpool(jnp.pad(x, [(0, 0), (1, 1), (1, 1), (0, 0)]), 3, 2)
+    for b, s in zip(p["blocks"], _resnet18_strides()):
+        x = _basic_block(b, x, s)
+    return avgpool_global(x) @ p["fc"]["w"]
+
+
+def _resnext_block_init(rng, cin, cmid, cout, stride, groups=32):
+    r = jax.random.split(rng, 4)
+    p = {"conv1": _conv_init(r[0], 1, 1, cin, cmid), "bn1": _bn_init(cmid),
+         "conv2": _conv_init(r[1], 3, 3, cmid // groups, cmid), "bn2": _bn_init(cmid),
+         "conv3": _conv_init(r[2], 1, 1, cmid, cout), "bn3": _bn_init(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(r[3], 1, 1, cin, cout)
+        p["bnp"] = _bn_init(cout)
+    return p
+
+
+def _resnext_block(p, x, s, g=32):
+    y = jax.nn.relu(bn(p["bn1"], conv2d(p["conv1"], x)))
+    y = jax.nn.relu(bn(p["bn2"], conv2d(p["conv2"], y, stride=s, groups=g)))
+    y = bn(p["bn3"], conv2d(p["conv3"], y))
+    sc = bn(p["bnp"], conv2d(p["proj"], x, stride=s)) if "proj" in p else x
+    return jax.nn.relu(y + sc)
+
+
+def resnext50_init(rng, num_classes=1000):
+    r = iter(jax.random.split(rng, 64))
+    p = {"conv1": _conv_init(next(r), 7, 7, 3, 64), "bn1": _bn_init(64)}
+    blocks, cin = [], 64
+    stages = [(128, 256, 3), (256, 512, 4), (512, 1024, 6), (1024, 2048, 3)]
+    for stage, (cmid, cout, n) in enumerate(stages):
+        for b in range(n):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            blocks.append(_resnext_block_init(next(r), cin, cmid, cout, stride))
+            cin = cout
+    p["blocks"] = blocks
+    p["fc"] = {"w": (jax.random.normal(next(r), (2048, num_classes), jnp.float32)
+                     / math.sqrt(2048))}
+    return p
+
+
+def _resnext50_strides():
+    out = []
+    for stage, (_, _, n) in enumerate([(0, 0, 3), (0, 0, 4), (0, 0, 6), (0, 0, 3)]):
+        for b in range(n):
+            out.append(2 if (stage > 0 and b == 0) else 1)
+    return out
+
+
+def resnext50_forward(p, images):
+    x = jax.nn.relu(bn(p["bn1"], conv2d(p["conv1"], images, stride=2)))
+    x = maxpool(jnp.pad(x, [(0, 0), (1, 1), (1, 1), (0, 0)]), 3, 2)
+    for b, s in zip(p["blocks"], _resnext50_strides()):
+        x = _resnext_block(b, x, s)
+    return avgpool_global(x) @ p["fc"]["w"]
+
+
+# ======================================================================
+# unified API
+# ======================================================================
+
+_VARIANTS = {
+    "squeezenet": (squeezenet_init, squeezenet_forward),
+    "resnet18": (resnet18_init, resnet18_forward),
+    "resnext50": (resnext50_init, resnext50_forward),
+}
+
+
+def init_params(rng, cfg: ModelConfig):
+    init, _ = _VARIANTS[cfg.cnn_variant]
+    return init(rng, cfg.num_classes)
+
+
+def forward(params, images, cfg: ModelConfig):
+    _, fwd = _VARIANTS[cfg.cnn_variant]
+    return fwd(params, images)
+
+
+def predict(params, images, cfg: ModelConfig):
+    """The paper's Lambda handler body: forward pass -> class id."""
+    return jnp.argmax(forward(params, images, cfg), axis=-1)

@@ -1,0 +1,230 @@
+"""Shared model configuration and parameter utilities.
+
+All models in ``repro.models`` are pure-functional JAX modules: parameters are
+nested dicts of ``jnp.ndarray`` (pytrees), initialised by ``init_params(rng,
+cfg)`` and consumed by pure ``apply``-style functions.  No framework (flax /
+haiku) is used — this keeps the pytree structure fully transparent to the
+sharding rules in ``repro.launch.sharding`` and to the checkpointing layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree of jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A single config type shared by every architecture family.
+
+    Family selects the forward implementation; unused fields are ignored by
+    families that do not need them.
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | cnn
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- attention variants ---
+    attention_window: int = 0    # 0 = full causal; >0 = sliding window
+    rope_theta: float = 10000.0
+    # --- hybrid (RecurrentGemma) ---
+    pattern: tuple = ()          # e.g. ("rglru", "rglru", "attn")
+    rglru_conv_width: int = 4
+    # --- ssm (RWKV-6) ---
+    rwkv_decay_lora: int = 64
+    rwkv_mix_lora: int = 32
+    # --- encoder-decoder (Whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0         # precomputed frame embeddings length
+    # --- vlm (LLaVA-NeXT) ---
+    num_image_tokens: int = 0    # anyres patch-embedding stub length
+    # --- norm / act / dtypes ---
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "silu"            # silu | gelu | relu
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # --- cnn (paper models) ---
+    cnn_variant: str = ""        # squeezenet | resnet18 | resnext50
+    num_classes: int = 1000
+    image_size: int = 224
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // max(self.num_heads, 1)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter count (analytic, for roofline MODEL_FLOPS = 6*N*D).
+    def param_count(self, active_only: bool = False) -> int:
+        c = self
+        if c.family == "cnn":
+            return 0  # counted empirically via pytree size
+        d, hd = c.d_model, c.resolved_head_dim
+        attn = d * c.q_dim + 2 * d * c.kv_dim + c.q_dim * d
+        if c.qkv_bias:
+            attn += c.q_dim + 2 * c.kv_dim
+        if c.is_moe:
+            e = c.num_experts_per_tok if active_only else c.num_experts
+            mlp = e * (3 * d * c.d_ff) + d * c.num_experts  # experts + router
+        else:
+            mlp = 3 * d * c.d_ff
+        if c.family == "ssm":
+            # rwkv6: time-mix (r,k,v,g,o ~ 5 d^2 + decay lora) + channel-mix
+            tmix = 4 * d * d + d * d + 2 * d * c.rwkv_decay_lora
+            cmix = 2 * d * c.d_ff + c.d_ff * 0  # k: d->ff, v: ff->d (rwkv cmix: r d->d too)
+            cmix = d * c.d_ff + c.d_ff * d + d * d
+            per_layer = tmix + cmix
+        elif c.family == "hybrid":
+            # average over the pattern: recurrent block vs attention block
+            rec = 2 * d * d + d * c.rglru_conv_width + 2 * d  # in/out proj + conv + gates
+            per_rec = rec + 3 * d * c.d_ff
+            per_attn = attn + 3 * d * c.d_ff
+            n_rec = sum(1 for p in self.full_pattern() if p == "rglru")
+            n_attn = c.num_layers - n_rec
+            return c.vocab_size * d + n_rec * per_rec + n_attn * per_attn
+        else:
+            per_layer = attn + mlp
+        n = c.vocab_size * d + c.num_layers * per_layer
+        if c.family == "audio":
+            n += c.encoder_layers * (attn + mlp) + c.num_layers * attn  # cross-attn
+        if not c.tie_embeddings:
+            n += c.vocab_size * d
+        return n
+
+    def full_pattern(self) -> tuple:
+        """Per-layer block types for hybrid models (len == num_layers)."""
+        if not self.pattern:
+            return ("attn",) * self.num_layers
+        reps = math.ceil(self.num_layers / len(self.pattern))
+        return (self.pattern * reps)[: self.num_layers]
+
+
+# ----------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, dtype, bias: bool = False,
+               scale: float | None = None) -> dict:
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p: dict, x: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    w = p["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def norm_init(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+_ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def activation(name: str) -> Callable:
+    return _ACTS[name]
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _array_leaves(params: Params):
+    return [x for x in jax.tree_util.tree_leaves(params) if hasattr(x, "size")]
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in _array_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * jnp.dtype(x.dtype).itemsize for x in _array_leaves(params))

@@ -1,0 +1,344 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention
+in a repeating 1:2 pattern (arXiv:2402.19427).
+
+Temporal mixing alternates per the config ``pattern`` (default
+``("rglru", "rglru", "attn")``).  Layers are grouped into *pattern units* and
+scanned; a remainder stack covers ``num_layers % len(pattern)`` (e.g. the 9B
+config's 38 = 12*3 + 2 layers).
+
+* RG-LRU: ``r,i = sigmoid(W_a x), sigmoid(W_x x)``; ``a = exp(-c*softplus(L)*r)``;
+  ``h_t = a h_{t-1} + sqrt(1-a^2) * (i * x)`` — evaluated with
+  ``jax.lax.associative_scan`` for train/prefill (parallel over time) and a
+  single fused step for decode.
+* Local attention: MQA (kv=1) with a sliding window; the decode cache is a
+  **ring buffer of window size** (state is O(window), which together with the
+  O(1) recurrent state makes long_500k native for this family).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_norm, dense, dense_init, norm_init
+from .layers import (_split_heads, apply_rope, attn_init, causal_window_mask,
+                     embed, embed_init, mlp_apply, mlp_init, sdpa,
+                     attention_chunked, CHUNK_THRESHOLD, Q_CHUNK)
+
+LRU_C = 8.0
+
+
+# ----------------------------------------------------------------------
+# RG-LRU recurrent block
+# ----------------------------------------------------------------------
+
+def rec_block_init(rng, cfg: ModelConfig) -> dict:
+    d, pdt = cfg.d_model, cfg.pdt
+    dr = d  # lru_width == d_model for RecurrentGemma
+    r = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(r[0], d, 2 * dr, pdt),
+        "conv_w": (jax.random.normal(r[1], (cfg.rglru_conv_width, dr), jnp.float32)
+                   * 0.1).astype(pdt),
+        "conv_b": jnp.zeros((dr,), pdt),
+        "wa": dense_init(r[2], dr, dr, pdt, bias=True),
+        "wx": dense_init(r[3], dr, dr, pdt, bias=True),
+        "lam": jnp.full((dr,), 2.0, jnp.float32),  # softplus(2) ~ healthy decay
+        "w_out": dense_init(r[4], dr, d, pdt),
+    }
+
+
+def _causal_conv(w, b, x, state):
+    """Depthwise causal conv, width W.  x: (B,T,dr), state: (B,W-1,dr)."""
+    width = w.shape[0]
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width))
+    new_state = xp[:, -(width - 1):]
+    return y + b.astype(x.dtype), new_state
+
+
+def _rglru(p, x, h0):
+    """x: (B,T,dr) -> (y, h_final).  Linear recurrence via associative scan."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["wa"], xf, dtype=jnp.float32))
+    i = jax.nn.sigmoid(dense(p["wx"], xf, dtype=jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9)) * (i * xf)
+    # prepend initial state as a pseudo-step: h_0 absorbed into first b
+    b0 = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def _rglru_step(p, x, h):
+    """x: (B,1,dr), h: (B,dr) fp32."""
+    xf = x[:, 0].astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(p["wa"], xf, dtype=jnp.float32))
+    i = jax.nn.sigmoid(dense(p["wx"], xf, dtype=jnp.float32))
+    a = jnp.exp(-LRU_C * jax.nn.softplus(p["lam"]) * r)
+    h = a * h + jnp.sqrt(jnp.clip(1.0 - a * a, 1e-9)) * (i * xf)
+    return h.astype(x.dtype)[:, None], h
+
+
+def rec_block_apply(p, x, state, cfg: ModelConfig, *, step: bool):
+    """x: (B,T,d); state {"conv": (B,W-1,dr), "lru": (B,dr) fp32}."""
+    xb, gate = jnp.split(dense(p["w_in"], x), 2, axis=-1)
+    xc, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xb, state["conv"])
+    if step:
+        y, lru = _rglru_step(p, xc, state["lru"])
+    else:
+        y, lru = _rglru(p, xc, state["lru"])
+    y = y * jax.nn.gelu(gate)
+    return dense(p["w_out"], y), {"conv": conv_state, "lru": lru}
+
+
+def rec_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, d), dtype),
+            "lru": jnp.zeros((batch, d), jnp.float32)}
+
+
+def rec_state_spec(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.rglru_conv_width - 1, d), dtype),
+            "lru": jax.ShapeDtypeStruct((batch, d), jnp.float32)}
+
+
+# ----------------------------------------------------------------------
+# Local attention block with ring-buffer window cache
+# ----------------------------------------------------------------------
+
+def attn_state_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w, hd = cfg.attention_window, cfg.resolved_head_dim
+    shape = (batch, w, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_state_spec(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w, hd = cfg.attention_window, cfg.resolved_head_dim
+    shape = (batch, w, cfg.num_kv_heads, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def local_attn_full(p, x, positions, cfg: ModelConfig):
+    """Full-sequence local attention; returns (y, ring-buffer cache)."""
+    s = x.shape[1]
+    win = cfg.attention_window
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads)
+    k = _split_heads(dense(p["wk"], x), cfg.num_kv_heads)
+    v = _split_heads(dense(p["wv"], x), cfg.num_kv_heads)
+    q = apply_rope(q, positions[None], cfg.rope_theta)
+    k = apply_rope(k, positions[None], cfg.rope_theta)
+    if s > CHUNK_THRESHOLD and s % Q_CHUNK == 0:
+        out = attention_chunked(q, k, v, positions, positions, win)
+    else:
+        out = sdpa(q, k, v, causal_window_mask(positions, positions, win))
+    y = dense(p["wo"], out.reshape(*x.shape[:2], -1))
+    # ring-buffer cache: slot of position p is p % win
+    if s >= win:
+        tail_k, tail_v = k[:, s - win:], v[:, s - win:]
+        slots = (s - win + jnp.arange(win)) % win
+        ck = jnp.zeros_like(tail_k).at[:, slots].set(tail_k)
+        cv = jnp.zeros_like(tail_v).at[:, slots].set(tail_v)
+    else:
+        pad = [(0, 0), (0, win - s), (0, 0), (0, 0)]
+        ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+    return y, {"k": ck, "v": cv}
+
+
+def local_attn_step(p, x, pos, state, cfg: ModelConfig):
+    """One-token local attention against the ring buffer.  pos: scalar."""
+    b = x.shape[0]
+    win = cfg.attention_window
+    q = _split_heads(dense(p["wq"], x), cfg.num_heads)
+    k = _split_heads(dense(p["wk"], x), cfg.num_kv_heads)
+    v = _split_heads(dense(p["wv"], x), cfg.num_kv_heads)
+    posv = (jnp.zeros((1,), jnp.int32) + pos)[None]
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    slot = jnp.mod(pos, win)
+    ck = jax.lax.dynamic_update_slice(state["k"], k.astype(state["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(state["v"], v.astype(state["v"].dtype),
+                                      (0, slot, 0, 0))
+    # absolute position held by each ring slot
+    idx = jnp.arange(win, dtype=jnp.int32)
+    base = pos - slot
+    kv_pos = jnp.where(idx <= slot, base + idx, base - win + idx)
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    out = sdpa(q, ck, cv, valid[None, None, :])
+    y = dense(p["wo"], out.reshape(b, 1, -1))
+    return y, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------
+# blocks / units
+# ----------------------------------------------------------------------
+
+def block_init(rng, kind: str, cfg: ModelConfig) -> dict:
+    r = jax.random.split(rng, 2)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm, cfg.pdt),
+         "ln2": norm_init(cfg.d_model, cfg.norm, cfg.pdt),
+         "mlp": mlp_init(r[1], cfg)}
+    if kind == "rglru":
+        p["rec"] = rec_block_init(r[0], cfg)
+    else:
+        p["attn"] = attn_init(r[0], cfg)
+    return p
+
+
+def block_apply(p, kind: str, x, positions, state, cfg: ModelConfig, *, step: bool):
+    from repro import shardctx
+    x = shardctx.constrain_batch(x, seq_dim=1)
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if kind == "rglru":
+        a, nstate = rec_block_apply(p["rec"], h, state, cfg, step=step)
+    elif step:
+        a, nstate = local_attn_step(p["attn"], h, positions, state, cfg)
+    else:
+        a, nstate = local_attn_full(p["attn"], h, positions, cfg)
+    x = x + a
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    return x + mlp_apply(p["mlp"], h, cfg), nstate
+
+
+def block_state_init(kind: str, cfg: ModelConfig, batch: int, dtype):
+    return (rec_state_init(cfg, batch, dtype) if kind == "rglru"
+            else attn_state_init(cfg, batch, dtype))
+
+
+def block_state_spec(kind: str, cfg: ModelConfig, batch: int, dtype):
+    return (rec_state_spec(cfg, batch, dtype) if kind == "rglru"
+            else attn_state_spec(cfg, batch, dtype))
+
+
+def _split_layers(cfg: ModelConfig):
+    pat = cfg.pattern or ("attn",)
+    n_units = cfg.num_layers // len(pat)
+    rem = cfg.full_pattern()[n_units * len(pat):]
+    return pat, n_units, rem
+
+
+# ----------------------------------------------------------------------
+# init / cache
+# ----------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    pat, n_units, rem = _split_layers(cfg)
+    r_embed, r_units, r_extra = jax.random.split(rng, 3)
+
+    def unit_init(r):
+        rs = jax.random.split(r, len(pat))
+        return {f"b{i}": block_init(rs[i], kind, cfg)
+                for i, kind in enumerate(pat)}
+
+    units = jax.vmap(unit_init)(jax.random.split(r_units, n_units))
+    extra = [block_init(jax.random.fold_in(r_extra, i), kind, cfg)
+             for i, kind in enumerate(rem)]
+    return {
+        "embed": embed_init(r_embed, cfg),
+        "units": units,
+        "extra": extra,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.pdt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int = 0, dtype=None) -> dict:
+    dt = dtype or cfg.cdt
+    pat, n_units, rem = _split_layers(cfg)
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_units,) + x.shape), tree)
+    units = {f"b{i}": stack(block_state_init(kind, cfg, batch, dt))
+             for i, kind in enumerate(pat)}
+    extra = [block_state_init(kind, cfg, batch, dt) for kind in rem]
+    return {"units": units, "extra": extra}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int = 0, dtype=None) -> dict:
+    dt = dtype or cfg.cdt
+    pat, n_units, rem = _split_layers(cfg)
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((n_units,) + x.shape, x.dtype), tree)
+    units = {f"b{i}": stack(block_state_spec(kind, cfg, batch, dt))
+             for i, kind in enumerate(pat)}
+    extra = [block_state_spec(kind, cfg, batch, dt) for kind in rem]
+    return {"units": units, "extra": extra}
+
+
+# ----------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------
+
+def _apply_stack(params, x, positions, cache, cfg: ModelConfig, *,
+                 step: bool, remat: bool = False):
+    pat, n_units, rem = _split_layers(cfg)
+
+    def unit_body(carry, inp):
+        up, ust = inp
+        y = carry
+        nst = {}
+        for i, kind in enumerate(pat):
+            y, nst[f"b{i}"] = block_apply(up[f"b{i}"], kind, y, positions,
+                                          ust[f"b{i}"], cfg, step=step)
+        return y, nst
+
+    if remat:
+        unit_body = jax.checkpoint(unit_body,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_units = jax.lax.scan(unit_body, x, (params["units"], cache["units"]))
+    new_extra = []
+    for i, kind in enumerate(rem):
+        x, st = block_apply(params["extra"][i], kind, x, positions,
+                            cache["extra"][i], cfg, step=step)
+        new_extra.append(st)
+    return x, {"units": new_units, "extra": new_extra}
+
+
+def forward(params, tokens, cfg: ModelConfig, *, cache=None, remat: bool = False,
+            return_state: bool = False):
+    x = embed(params["embed"], tokens, cfg).astype(cfg.cdt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdt)  # gemma-style embed scale
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if cache is None:
+        cache = init_cache(cfg, b)
+    x, nstate = _apply_stack(params, x, positions, cache, cfg,
+                             step=False, remat=remat)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed_h(params, x, cfg)
+    if return_state:
+        return logits, nstate
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def unembed_h(params, x, cfg):
+    from .layers import unembed
+    return unembed(params["embed"], x, cfg)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits, _ = forward(params, batch["tokens"], cfg, remat=remat)
+    from .transformer import softmax_xent
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss, "aux": jnp.zeros(())}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int | None = None):
+    logits, state = forward(params, tokens, cfg, return_state=True)
+    return logits[:, -1], state
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    x = embed(params["embed"], token[:, None], cfg).astype(cfg.cdt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdt)
+    x, nstate = _apply_stack(params, x, pos, cache, cfg, step=True)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed_h(params, x, cfg)[:, 0]
+    return logits, nstate

@@ -1,0 +1,261 @@
+"""RWKV-6 "Finch" — attention-free RNN with data-dependent decay (arXiv:2404.05892).
+
+Per layer: a *time-mix* block (data-dependent token-shift "ddlerp", per-channel
+data-dependent decay ``w_t = exp(-exp(w0 + lora(x)))``, WKV matrix-state
+recurrence with bonus ``u``) and a *channel-mix* block (shifted squared-relu
+MLP).  The recurrent state is O(1) in sequence length — this is the native
+sub-quadratic family for ``long_500k``.
+
+Recurrence (per head, key-dim i, value-dim j):
+    o_t[j] = sum_i r_t[i] * (S[i,j] + u[i] * k_t[i] * v_t[j])
+    S      = diag(w_t) @ S + k_t (outer) v_t
+Implemented as ``jax.lax.scan`` over time (reference) or the chunked Pallas
+kernel in ``repro.kernels.rwkv`` (optimized path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_norm, dense, dense_init, norm_init
+from .layers import embed, embed_init, unembed
+
+MIX_KEYS = ("r", "k", "v", "w", "g")
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def _tmix_init(rng, cfg: ModelConfig) -> dict:
+    d, pdt = cfg.d_model, cfg.pdt
+    h = cfg.num_heads
+    hd = d // h
+    r = jax.random.split(rng, 10)
+    lora, dl = cfg.rwkv_mix_lora, cfg.rwkv_decay_lora
+    p = {
+        "mu_x": jnp.zeros((d,), pdt) + 0.5,
+        "mu": jnp.full((5, d), 0.5, pdt),
+        "mix_w1": dense_init(r[0], d, 5 * lora, pdt)["w"].reshape(d, 5, lora),
+        "mix_w2": dense_init(r[1], lora, d, pdt, scale=0.01)["w"] * jnp.ones((5, 1, 1), pdt),
+        "w0": jnp.full((d,), -5.0, jnp.float32),
+        "decay_w1": dense_init(r[2], d, dl, pdt)["w"],
+        "decay_w2": dense_init(r[3], dl, d, pdt, scale=0.01)["w"],
+        "u": jnp.zeros((h, hd), jnp.float32) + 0.5,
+        "wr": dense_init(r[4], d, d, pdt),
+        "wk": dense_init(r[5], d, d, pdt),
+        "wv": dense_init(r[6], d, d, pdt),
+        "wg": dense_init(r[7], d, d, pdt),
+        "wo": dense_init(r[8], d, d, pdt, scale=0.0),
+        "gn": norm_init(d, "layernorm", pdt),   # per-head group norm
+    }
+    return p
+
+
+def _cmix_init(rng, cfg: ModelConfig) -> dict:
+    d, f, pdt = cfg.d_model, cfg.d_ff, cfg.pdt
+    r = jax.random.split(rng, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, pdt),
+        "mu_r": jnp.full((d,), 0.5, pdt),
+        "wk": dense_init(r[0], d, f, pdt),
+        "wv": dense_init(r[1], f, d, pdt),
+        "wr": dense_init(r[2], d, d, pdt),
+    }
+
+
+def layer_init(rng, cfg: ModelConfig) -> dict:
+    r = jax.random.split(rng, 2)
+    return {
+        "ln1": norm_init(cfg.d_model, "layernorm", cfg.pdt),
+        "ln2": norm_init(cfg.d_model, "layernorm", cfg.pdt),
+        "tmix": _tmix_init(r[0], cfg),
+        "cmix": _cmix_init(r[1], cfg),
+    }
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    r_embed, r_layers = jax.random.split(rng)
+    layers = jax.vmap(lambda r: layer_init(r, cfg))(
+        jax.random.split(r_layers, cfg.num_layers))
+    return {
+        "embed": embed_init(r_embed, cfg),
+        "ln_in": norm_init(cfg.d_model, "layernorm", cfg.pdt),
+        "layers": layers,
+        "final_norm": norm_init(cfg.d_model, "layernorm", cfg.pdt),
+    }
+
+
+# ----------------------------------------------------------------------
+# blocks
+# ----------------------------------------------------------------------
+
+def _shift(x, prev):
+    """x: (B,T,d), prev: (B,d) -> x shifted right by one with prev injected."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xprev, cfg):
+    """Data-dependent token-shift: returns dict of mixed inputs for r,k,v,w,g."""
+    delta = xprev - x
+    xx = x + delta * p["mu_x"].astype(x.dtype)
+    stacked = jnp.tanh(jnp.einsum("btd,dfl->fbtl", xx, p["mix_w1"].astype(x.dtype)))
+    adj = jnp.einsum("fbtl,fld->fbtd", stacked, p["mix_w2"].astype(x.dtype))
+    out = {}
+    for i, key in enumerate(MIX_KEYS):
+        mix = p["mu"][i].astype(x.dtype) + adj[i]
+        out[key] = x + delta * mix
+    return out
+
+
+def wkv_ref(r, k, v, w, u, state):
+    """Pure-jnp WKV recurrence.  r,k,v,w: (B,T,H,hd) fp32; u: (H,hd);
+    state: (B,H,hd,hd).  Returns (o (B,T,H,hd), final state)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        o = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, o
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, o = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(o, 0, 1), state
+
+
+def time_mix(p, x, state_wkv, shift_prev, cfg: ModelConfig):
+    """x: (B,T,d).  Returns (out, new_wkv_state, new_shift (B,d))."""
+    b, t, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    xprev = _shift(x, shift_prev)
+    m = _ddlerp(p, x, xprev, cfg)
+    r = dense(p["wr"], m["r"]).reshape(b, t, h, hd).astype(jnp.float32)
+    k = dense(p["wk"], m["k"]).reshape(b, t, h, hd).astype(jnp.float32)
+    v = dense(p["wv"], m["v"]).reshape(b, t, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(dense(p["wg"], m["g"]))
+    dec = p["w0"] + jnp.tanh(m["w"].astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32)) \
+        @ p["decay_w2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, hd)          # (0,1) decay
+    u = p["u"].astype(jnp.float32)
+    from repro.kernels import dispatch as _kd
+    if _kd.use_pallas("rwkv"):
+        o, state_wkv = _kd.rwkv_scan(r, k, v, w, u, state_wkv)
+    else:
+        o, state_wkv = wkv_ref(r, k, v, w, u, state_wkv)
+    o = o.reshape(b, t, h, hd)
+    # per-head group norm
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(b, t, d) * p["gn"]["scale"].astype(jnp.float32) \
+        + p["gn"]["bias"].astype(jnp.float32)
+    out = dense(p["wo"], (o.astype(x.dtype) * g))
+    return out, state_wkv, x[:, -1]
+
+
+def channel_mix(p, x, shift_prev, cfg: ModelConfig):
+    xprev = _shift(x, shift_prev)
+    xk = x + (xprev - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xprev - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(p["wk"], xk)))
+    kv = dense(p["wv"], k)
+    return jax.nn.sigmoid(dense(p["wr"], xr)) * kv, x[:, -1]
+
+
+def _layer(x, lp, state, cfg: ModelConfig):
+    from repro import shardctx
+    x = shardctx.constrain_batch(x, seq_dim=1)
+    h = apply_norm(lp["ln1"], x, "layernorm")
+    a, wkv, sh_t = time_mix(lp["tmix"], h, state["wkv"], state["shift_t"], cfg)
+    x = x + a
+    h = apply_norm(lp["ln2"], x, "layernorm")
+    c, sh_c = channel_mix(lp["cmix"], h, state["shift_c"], cfg)
+    return x + c, {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+
+
+# ----------------------------------------------------------------------
+# public API (mirrors transformer.py)
+# ----------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int = 0, dtype=None) -> dict:
+    """RWKV 'cache' = recurrent state; O(1) in seq (seq arg ignored)."""
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    sdt = dtype or cfg.cdt
+    return {
+        "wkv": jnp.zeros((cfg.num_layers, batch, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((cfg.num_layers, batch, d), sdt),
+        "shift_c": jnp.zeros((cfg.num_layers, batch, d), sdt),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq: int = 0, dtype=None) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    sdt = dtype or cfg.cdt
+    return {
+        "wkv": jax.ShapeDtypeStruct((cfg.num_layers, batch, h, hd, hd), jnp.float32),
+        "shift_t": jax.ShapeDtypeStruct((cfg.num_layers, batch, d), sdt),
+        "shift_c": jax.ShapeDtypeStruct((cfg.num_layers, batch, d), sdt),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, *, state=None, remat: bool = False,
+            return_state: bool = False):
+    x = embed(params["embed"], tokens, cfg).astype(cfg.cdt)
+    x = apply_norm(params["ln_in"], x, "layernorm")
+    b = x.shape[0]
+    if state is None:
+        state = init_cache(cfg, b)
+
+    def body(carry, inp):
+        lp, st = inp
+        y, nst = _layer(carry, lp, st, cfg)
+        return y, nst
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, nstate = jax.lax.scan(body, x, (params["layers"], state))
+    x = apply_norm(params["final_norm"], x, "layernorm")
+    logits = unembed(params["embed"], x, cfg)
+    if return_state:
+        return logits, nstate
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits, _ = forward(params, batch["tokens"], cfg, remat=remat)
+    from .transformer import softmax_xent
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss, "aux": jnp.zeros(())}
+
+
+PREFILL_CHUNK = 8192
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int | None = None,
+            chunk: int = PREFILL_CHUNK):
+    """Long prompts run as a scan over sequence chunks with the recurrent
+    state carried between them — numerically identical (the recurrence is
+    exact), but the materialised per-chunk activations shrink by S/chunk.
+    This is the SSM-native answer to long-prefill memory (EXPERIMENTS §Perf F)."""
+    b, s = tokens.shape
+    if s > chunk and s % chunk == 0:
+        state = init_cache(cfg, b)
+        tc = jnp.moveaxis(tokens.reshape(b, s // chunk, chunk), 1, 0)
+
+        def body(st, tk):
+            logits, nst = forward(params, tk, cfg, state=st, return_state=True)
+            return nst, logits[:, -1]
+
+        state, lasts = jax.lax.scan(body, state, tc)
+        return lasts[-1], state
+    logits, state = forward(params, tokens, cfg, return_state=True)
+    return logits[:, -1], state
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    """pos is ignored (stateful recurrence); kept for interface parity."""
+    logits, state = forward(params, token[:, None], cfg, state=cache,
+                            return_state=True)
+    return logits[:, -1], state

@@ -1,0 +1,67 @@
+"""LLaVA-NeXT (Mistral-7B backbone) — VLM with anyres tiling
+[hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+Per the assignment carve-out, the vision tower (CLIP/SigLIP ViT) and the
+multimodal projector are a STUB: ``input_specs`` provides precomputed,
+already-projected patch embeddings ``(B, num_image_tokens, d_model)``.  With
+anyres tiling the image contributes up to 5 tiles (base + 2x2 grid) of 576
+patches = 2880 image tokens.  This module implements the *language model*:
+embeddings for the text tokens with the leading ``num_image_tokens`` positions
+replaced by the patch embeddings, then the standard Mistral decoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .common import ModelConfig
+from .layers import embed
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    return transformer.init_params(rng, cfg)
+
+
+def merge_embeddings(params, tokens, patch_embeds, cfg: ModelConfig):
+    """Token embeds with positions [0, P) overwritten by patch embeds."""
+    x = embed(params["embed"], tokens, cfg).astype(cfg.cdt)
+    p = min(patch_embeds.shape[1], x.shape[1])
+    return jax.lax.dynamic_update_slice(
+        x, patch_embeds[:, :p].astype(cfg.cdt), (0, 0, 0))
+
+
+def forward(params, batch_inputs, cfg: ModelConfig, *, remat: bool = False):
+    x = merge_embeddings(params, batch_inputs["tokens"],
+                         batch_inputs["patch_embeds"], cfg)
+    return transformer.forward(params, batch_inputs["tokens"], cfg,
+                               input_embeds=x, remat=remat)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits, aux = forward(params, batch, cfg, remat=remat)
+    # image positions don't contribute to the LM loss
+    s = batch["tokens"].shape[1]
+    text_mask = (jnp.arange(s) >= cfg.num_image_tokens).astype(jnp.float32)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    loss = jnp.sum((logz - ll) * text_mask) / jnp.clip(text_mask.sum() *
+                                                       logits.shape[0], 1.0)
+    loss = loss + aux
+    return loss, {"xent": loss, "aux": aux}
+
+
+init_cache = transformer.init_cache
+cache_spec = transformer.cache_spec
+
+
+def prefill(params, batch_inputs, cfg: ModelConfig, cache_len: int | None = None):
+    x = merge_embeddings(params, batch_inputs["tokens"],
+                         batch_inputs["patch_embeds"], cfg)
+    return transformer.prefill(params, batch_inputs["tokens"], cfg, cache_len,
+                               input_embeds=x)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    return transformer.decode_step(params, cache, token, pos, cfg)

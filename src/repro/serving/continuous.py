@@ -1,0 +1,126 @@
+"""Continuous batching (slot-based, vLLM-style scheduling).
+
+The fixed-size decode batch is a set of *slots*; sequences at different
+positions decode together using the vector-position decode path
+(``attention_decode`` with per-row positions).  When a sequence finishes its
+slot is immediately refilled from the queue — no waiting for the whole batch,
+which is what turns the paper's per-request serving economics into sustained
+throughput (DESIGN.md §3, "batching is first-class").
+
+Transformer-family models (dense / vlm).  Greedy decoding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    n_new: int = 16
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list
+    steps_in_flight: int
+
+
+class ContinuousServer:
+    def __init__(self, cfg: ModelConfig, *, slots: int = 4, max_seq: int = 128,
+                 seed: int = 0):
+        assert cfg.family in ("dense", "moe", "vlm"), \
+            "continuous batching drives the transformer KV-cache layout"
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.params = api.init_params(jax.random.PRNGKey(seed), cfg)
+        self.cache = api.init_cache(cfg, slots, max_seq)
+        self.pos = np.zeros(slots, np.int32)
+        self.active = np.zeros(slots, bool)
+        self.rid = [-1] * slots
+        self.remaining = np.zeros(slots, np.int32)
+        self.last_tok = np.zeros(slots, np.int32)
+        self.out: dict[int, list] = {}
+        self.queue: deque[Request] = deque()
+        self._steps = 0
+        self._prefill = jax.jit(
+            lambda p, t, n: api.prefill(p, {"tokens": t}, cfg, cache_len=n),
+            static_argnames=("n",))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: api.decode_step(p, c, t, pos, cfg))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, pc = self._prefill(self.params, prompt, self.max_seq)
+            # copy the single-sequence cache into slot s
+            self.cache = jax.tree_util.tree_map(
+                lambda full, one: full.at[:, s].set(one[:, 0]),
+                self.cache, pc)
+            tok = int(jnp.argmax(logits[0]))
+            self.active[s] = True
+            self.rid[s] = req.rid
+            self.pos[s] = len(req.prompt)
+            self.remaining[s] = req.n_new - 1
+            self.last_tok[s] = tok
+            self.out[req.rid] = [tok]
+            if req.n_new == 1:
+                self._finish(s)
+
+    def _finish(self, s: int):
+        self.active[s] = False
+        self.rid[s] = -1
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One fused decode step across all active slots."""
+        toks = jnp.asarray(self.last_tok, jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._steps += 1
+        for s in range(self.slots):
+            if not self.active[s]:
+                continue
+            self.out[self.rid[s]].append(int(nxt[s]))
+            self.pos[s] += 1
+            self.last_tok[s] = nxt[s]
+            self.remaining[s] -= 1
+            if self.remaining[s] <= 0 or self.pos[s] >= self.max_seq - 1:
+                self._finish(s)
+
+    # ------------------------------------------------------------------
+    def run(self) -> list:
+        """Drain the queue; returns Completions in finish order."""
+        done: list[Completion] = []
+        reported: set[int] = set()
+        while self.queue or self.active.any():
+            self._admit()
+            if self.active.any():
+                self.step()
+            for rid, toks in self.out.items():
+                if rid not in reported and rid not in {self.rid[s] for s in
+                                                       range(self.slots)
+                                                       if self.active[s]}:
+                    done.append(Completion(rid, list(toks), self._steps))
+                    reported.add(rid)
+        return done

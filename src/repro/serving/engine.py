@@ -1,0 +1,112 @@
+"""InferenceEngine: the modern model-serving runtime.
+
+Wraps any registered architecture behind prefill/decode steps (jit'd once —
+the compile is the 'cold start' of the modern substrate, measured and fed to
+the serverless platform via ``repro.serving.handler``).  Mesh-aware: pass a
+mesh to shard params/caches with the production rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import shardctx
+from repro.configs.base import ArchSpec
+from repro.models import api
+from repro.models.common import ModelConfig, count_params
+from repro.serving.sampler import sample_token
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: "jnp.ndarray"          # (B, n_new)
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, *, seed: int = 0, mesh=None,
+                 max_cache: int = 256):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.max_cache = max_cache
+        t0 = time.perf_counter()
+        self.params = api.init_params(jax.random.PRNGKey(seed), cfg)
+        self.load_s = time.perf_counter() - t0
+        self._prefill = jax.jit(self._prefill_impl, static_argnames=("cache_len",))
+        self._decode = jax.jit(self._decode_impl)
+        self.compiled = False
+        self.compile_s = 0.0
+
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, params, inputs, cache_len):
+        with shardctx.use_mesh(self.mesh):
+            return api.prefill(params, inputs, self.cfg, cache_len)
+
+    def _decode_impl(self, params, cache, token, pos):
+        with shardctx.use_mesh(self.mesh):
+            return api.decode_step(params, cache, token, pos, self.cfg)
+
+    # ------------------------------------------------------------------
+    def warmup(self, batch: int, prompt_len: int):
+        """Compile both steps — the modern 'cold start'."""
+        t0 = time.perf_counter()
+        inputs = {"tokens": jnp.zeros((batch, prompt_len), jnp.int32)}
+        self._add_modal(inputs, batch)
+        _, cache = self._prefill(self.params, inputs, cache_len=self.max_cache)
+        _ = self._decode(self.params, cache, jnp.zeros((batch,), jnp.int32),
+                         jnp.int32(prompt_len))
+        jax.block_until_ready(_)
+        self.compile_s = time.perf_counter() - t0
+        self.compiled = True
+        return self.compile_s
+
+    def _add_modal(self, inputs: dict, batch: int):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            inputs["frame_embeds"] = jnp.zeros(
+                (batch, cfg.encoder_seq, cfg.d_model), cfg.cdt)
+        if cfg.family == "vlm":
+            inputs["patch_embeds"] = jnp.zeros(
+                (batch, cfg.num_image_tokens, cfg.d_model), cfg.cdt)
+
+    # ------------------------------------------------------------------
+    def generate(self, tokens: jnp.ndarray, n_new: int, *,
+                 temperature: float = 0.0, seed: int = 0) -> GenerateResult:
+        """tokens: (B, S) prompt.  Greedy/temperature decoding of n_new."""
+        b, s = tokens.shape
+        cache_len = min(self.max_cache, s + n_new)
+        inputs = {"tokens": tokens}
+        self._add_modal(inputs, b)
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, inputs, cache_len=cache_len)
+        logits.block_until_ready()
+        prefill_s = time.perf_counter() - t0
+
+        rng = jax.random.PRNGKey(seed)
+        out = []
+        tok = sample_token(logits, temperature, rng)
+        out.append(tok)
+        t0 = time.perf_counter()
+        for i in range(n_new - 1):
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(s + i))
+            tok = sample_token(logits, temperature, sub)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        decode_s = time.perf_counter() - t0
+        toks = jnp.stack(out, axis=1)
+        tps = (b * max(n_new - 1, 1)) / max(decode_s, 1e-9)
+        return GenerateResult(tokens=toks, prefill_s=prefill_s,
+                              decode_s=decode_s, tokens_per_s=tps)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {"arch": self.cfg.name, "params": count_params(self.params),
+                "load_s": self.load_s, "compile_s": self.compile_s}

@@ -1,0 +1,140 @@
+"""KV-cache management utilities for the serving engine.
+
+Three views over the layer-stacked cache pytree ``{"k","v"}: (L,B,S,K,hd)``:
+
+  * linear   — append-at-position (what transformer.decode_step uses)
+  * windowed — ring buffer of a fixed window (hybrid local attention)
+  * paged    — vLLM-style block tables: the cache is a pool of fixed-size
+               blocks; sequences own ordered block lists, so batches with
+               wildly different lengths share one pool without padding waste.
+
+The paged view is host-side bookkeeping (allocation/free) over a device pool;
+gather/scatter helpers produce the dense per-sequence view the attention
+kernels consume.  This is the substrate for continuous batching.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+# ----------------------------------------------------------------------
+# linear view
+# ----------------------------------------------------------------------
+
+def append(cache: dict, k_new, v_new, pos) -> dict:
+    """cache k/v: (L,B,S,K,hd); k_new/v_new: (L,B,1,K,hd); pos scalar."""
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k_new, (0, 0, pos, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v_new, (0, 0, pos, 0, 0)),
+    }
+
+
+def valid_mask(seq: int, pos, window: int = 0) -> jnp.ndarray:
+    idx = jnp.arange(seq, dtype=jnp.int32)
+    m = idx <= pos
+    if window:
+        m &= (pos - idx) < window
+    return m
+
+
+# ----------------------------------------------------------------------
+# paged view
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PagedPool:
+    """Host-side allocator over a device block pool.
+
+    pool k/v: (L, n_blocks, block, K, hd).  Block tables map sequence id ->
+    ordered block ids.  Device tensors are only touched by gather/scatter.
+    """
+    cfg: ModelConfig
+    n_blocks: int
+    block: int = 128
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        hd = self.cfg.resolved_head_dim
+        shape = (self.cfg.num_layers, self.n_blocks, self.block,
+                 self.cfg.num_kv_heads, hd)
+        self.k = jnp.zeros(shape, jnp.dtype(self.dtype))
+        self.v = jnp.zeros(shape, jnp.dtype(self.dtype))
+        self.free: list[int] = list(range(self.n_blocks))
+        self.tables: dict[int, list[int]] = {}
+        self.lengths: dict[int, int] = {}
+
+    # ----- allocation ------------------------------------------------
+    def allocate(self, seq_id: int, n_tokens: int):
+        need = -(-n_tokens // self.block)
+        if len(self.free) < need:
+            raise MemoryError(f"paged pool exhausted: need {need} blocks, "
+                              f"{len(self.free)} free")
+        blocks = [self.free.pop() for _ in range(need)]
+        self.tables[seq_id] = blocks
+        self.lengths[seq_id] = n_tokens
+        return blocks
+
+    def extend(self, seq_id: int, n_new: int = 1):
+        length = self.lengths[seq_id] + n_new
+        need = -(-length // self.block)
+        while len(self.tables[seq_id]) < need:
+            if not self.free:
+                raise MemoryError("paged pool exhausted on extend")
+            self.tables[seq_id].append(self.free.pop())
+        self.lengths[seq_id] = length
+
+    def release(self, seq_id: int):
+        self.free.extend(self.tables.pop(seq_id))
+        self.lengths.pop(seq_id)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.n_blocks
+
+    # ----- device data movement ---------------------------------------
+    def write_prefill(self, seq_id: int, ks, vs):
+        """ks/vs: (L, S, K, hd) for one sequence; scatters into the pool."""
+        s = ks.shape[1]
+        blocks = self.tables[seq_id]
+        for j, b in enumerate(blocks):
+            lo = j * self.block
+            hi = min(lo + self.block, s)
+            if lo >= s:
+                break
+            chunk_k = ks[:, lo:hi]
+            chunk_v = vs[:, lo:hi]
+            pad = self.block - (hi - lo)
+            if pad:
+                chunk_k = jnp.pad(chunk_k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+                chunk_v = jnp.pad(chunk_v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+            self.k = self.k.at[:, b].set(chunk_k)
+            self.v = self.v.at[:, b].set(chunk_v)
+
+    def write_token(self, seq_id: int, k1, v1):
+        """k1/v1: (L, K, hd) — append one token (extend() first)."""
+        pos = self.lengths[seq_id] - 1
+        b = self.tables[seq_id][pos // self.block]
+        off = pos % self.block
+        self.k = self.k.at[:, b, off].set(k1)
+        self.v = self.v.at[:, b, off].set(v1)
+
+    def gather(self, seq_id: int, pad_to: int | None = None):
+        """Dense (L, S_padded, K, hd) view of one sequence + valid mask."""
+        blocks = jnp.asarray(self.tables[seq_id], jnp.int32)
+        ks = self.k[:, blocks]            # (L, nb, block, K, hd)
+        vs = self.v[:, blocks]
+        l, nb, blk, kh, hd = ks.shape
+        ks = ks.reshape(l, nb * blk, kh, hd)
+        vs = vs.reshape(l, nb * blk, kh, hd)
+        length = self.lengths[seq_id]
+        if pad_to and pad_to > nb * blk:
+            padc = [(0, 0), (0, pad_to - nb * blk), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, padc), jnp.pad(vs, padc)
+        mask = jnp.arange(ks.shape[1]) < length
+        return ks, vs, mask

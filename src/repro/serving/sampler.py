@@ -1,0 +1,17 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jnp.ndarray, temperature: float, rng,
+                 top_k: int = 0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)

@@ -1,0 +1,80 @@
+"""Ambient sharding context for activation constraints inside model code.
+
+Models are mesh-agnostic; the launcher installs a mesh here and model code
+pins the canonical activation layout at layer boundaries:
+
+    batch dim  -> ("pod", "data")     (data parallelism)
+    feature d  -> replicated          (TP collects after each block)
+    seq dim    -> optionally "model"  (sequence parallelism, a perf variant)
+
+Without these constraints GSPMD is free to replicate activations over the
+data axis and turn FSDP weight shards into per-layer output all-reduces —
+valid but ~an order of magnitude more collective traffic (observed on the
+qwen1.5-110b train dry-run).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX = {"mesh": None, "seq_parallel": False}
+
+
+def set_mesh(mesh, *, seq_parallel: bool = False):
+    _CTX["mesh"] = mesh
+    _CTX["seq_parallel"] = seq_parallel
+
+
+def get_mesh():
+    return _CTX["mesh"]
+
+
+def seq_parallel() -> bool:
+    return bool(_CTX["seq_parallel"]) and _CTX["mesh"] is not None
+
+
+@contextmanager
+def use_mesh(mesh, *, seq_parallel: bool = False):
+    prev = dict(_CTX)
+    set_mesh(mesh, seq_parallel=seq_parallel)
+    try:
+        yield
+    finally:
+        _CTX.update(prev)
+
+
+def _dspec(mesh):
+    dax = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if not dax:
+        return None
+    return dax if len(dax) > 1 else dax[0]
+
+
+def _dsize(mesh):
+    n = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n *= mesh.shape[a]
+    return n
+
+
+def constrain_batch(x, *, batch_dim: int = 0, seq_dim: int | None = None):
+    """Pin activation sharding: batch over data axes (+ optional seq over
+    model for sequence parallelism).  No-op without an installed mesh or when
+    dims don't divide."""
+    mesh = _CTX["mesh"]
+    if mesh is None or not hasattr(x, "ndim") or x.ndim <= batch_dim:
+        return x
+    spec = [None] * x.ndim
+    d = _dspec(mesh)
+    if d is not None and x.shape[batch_dim] % _dsize(mesh) == 0:
+        spec[batch_dim] = d
+    if (seq_parallel() and seq_dim is not None and seq_dim < x.ndim
+            and "model" in mesh.axis_names
+            and x.shape[seq_dim] % mesh.shape["model"] == 0):
+        spec[seq_dim] = "model"
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,83 @@
+"""AdamW + schedules, pure-JAX pytree ops.
+
+Optimizer moments are fp32 regardless of param dtype and inherit the params'
+PartitionSpecs (ZeRO-style: sharded exactly like the weights), which is why
+``init`` is shape-preserving over the param tree — the dry-run eval_shapes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree) if _is_float(x)]
+    return jnp.sqrt(sum(leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: (jnp.zeros(p.shape, jnp.float32) if _is_float(p) else None)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        lr = (self.learning_rate(step) if callable(self.learning_rate)
+              else jnp.asarray(self.learning_rate, jnp.float32))
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            if not _is_float(p):
+                return p, mu, nu
+            g = g.astype(jnp.float32) * scale
+            mu = self.b1 * mu + (1.0 - self.b1) * g
+            nu = self.b2 * nu + (1.0 - self.b2) * g * g
+            mu_hat = mu / b1c
+            nu_hat = nu / b2c
+            delta = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, mu, nu
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"grad_norm": gnorm, "lr": lr}

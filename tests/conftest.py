@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run subprocesses set
+# their own XLA_FLAGS) — never force a device count here (see launch/dryrun).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

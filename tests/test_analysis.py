@@ -1,0 +1,82 @@
+"""HLO static-analysis + roofline unit tests (synthetic HLO text)."""
+import numpy as np
+
+from repro.analysis import hlo
+from repro.analysis.roofline import model_flops, roofline_terms
+from repro.configs.registry import ARCHS
+
+SYNTH = """
+HloModule jit_step
+
+%fused_computation.1 (param_0: f32[128,256], param_1: f32[256,512]) -> f32[128,512] {
+  %param_0 = f32[128,256] parameter(0)
+  %param_1 = f32[256,512] parameter(1)
+  ROOT %dot.9 = f32[128,512] dot(%param_0, %param_1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (p0: f32[128,256], p1: f32[256,512]) -> f32[128,512] {
+  %p0 = f32[128,256] parameter(0)
+  %p1 = f32[256,512] parameter(1)
+  %dot.1 = f32[128,512] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="jit(step)/while/body/dot_general"}
+  %all-reduce.1 = f32[128,512] all-reduce(%dot.1), replica_groups=[4,4]<=[16], metadata={op_name="jit(step)/while/body/psum"}
+  %all-gather.1 = f32[128,512] all-gather(%dot.1), replica_groups=[2,8]<=[16], dimensions={0}
+  ROOT %add.1 = f32[128,512] add(%all-reduce.1, %all-gather.1)
+}
+"""
+
+
+def test_dot_flops_counted_with_loop_weighting():
+    mod = hlo.Module(SYNTH)
+    base = 2 * 128 * 512 * 256
+    # entry dot inside while (depth 1, trips=(10,)) + fused dot (depth 0)
+    assert mod.flops(loop_trips=(10,)) == base * 10 + base
+    assert mod.flops() == 2 * base
+
+
+def test_collective_bytes_kinds_and_factors():
+    mod = hlo.Module(SYNTH)
+    coll = mod.collective_bytes()
+    n = 128 * 512 * 4
+    assert np.isclose(coll["all-reduce"], 2 * n * 3 / 4)
+    assert np.isclose(coll["all-gather"], n * 7 / 8)
+    coll10 = mod.collective_bytes(loop_trips=(10,))
+    assert np.isclose(coll10["all-reduce"], 10 * 2 * n * 3 / 4)  # in the loop
+    assert np.isclose(coll10["all-gather"], n * 7 / 8)           # not in loop
+
+
+def test_roofline_terms_dominance():
+    cfg = ARCHS["deepseek-7b"].config
+    meta = {"n_devices": 256, "shape": "train_4k", "kind": "train"}
+    analysis = {"flops_per_chip": 1e15, "collectives": {"total": 1e9}}
+    cost = {"bytes accessed": 1e12}
+    t = roofline_terms(cfg, meta, analysis, cost)
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] > t["memory_s"] > t["collective_s"]
+    assert t["model_flops"] > 0
+
+
+def test_model_flops_moe_counts_active_only():
+    dense = ARCHS["deepseek-7b"].config
+    moe = ARCHS["qwen3-moe-235b-a22b"].config
+    total = moe.param_count(active_only=False)
+    active = moe.param_count(active_only=True)
+    assert active < total / 4          # 235B total vs ~22B active
+    mf = model_flops(moe, "train", 256, 4096)
+    assert np.isclose(mf, 6.0 * active * 256 * 4096)
+
+
+def test_param_counts_match_model_cards():
+    """Analytic param counts should land near the published sizes."""
+    expect = {
+        "deepseek-7b": (6e9, 8e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "qwen1.5-110b": (95e9, 120e9),
+        "mistral-nemo-12b": (10e9, 14e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "rwkv6-1.6b": (1.2e9, 2.2e9),
+        "recurrentgemma-9b": (7.5e9, 11e9),
+        "whisper-tiny": (2e7, 8e7),
+    }
+    for aid, (lo, hi) in expect.items():
+        n = ARCHS[aid].config.param_count()
+        assert lo <= n <= hi, f"{aid}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"

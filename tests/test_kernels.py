@@ -1,0 +1,135 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import flash_attention_ref
+from repro.kernels.decode.ops import flash_decode
+from repro.kernels.decode.ref import flash_decode_ref
+from repro.kernels.rwkv.ops import wkv6
+from repro.kernels.rwkv.ref import wkv6_ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype, i=0):
+    x = jax.random.normal(jax.random.fold_in(RNG, i), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# flash prefill attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kh,hd", [
+    (2, 256, 4, 2, 64),     # GQA
+    (1, 128, 4, 4, 128),    # MHA, wide head
+    (2, 512, 8, 1, 64),     # MQA
+    (1, 384, 6, 6, 64),     # non-power-of-two seq (padding path)
+    (1, 64, 2, 2, 32),      # small (block = seq)
+])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_matches_ref(b, s, h, kh, hd, window):
+    q = _rand((b, s, h, hd), jnp.float32, 1)
+    k = _rand((b, s, kh, hd), jnp.float32, 2)
+    v = _rand((b, s, kh, hd), jnp.float32, 3)
+    out = flash_attention(q, k, v, window=window, interpret=True)
+    ref = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    q = _rand((1, 256, 4, 64), dtype, 1)
+    k = _rand((1, 256, 2, 64), dtype, 2)
+    v = _rand((1, 256, 2, 64), dtype, 3)
+    out = flash_attention(q, k, v, interpret=True).astype(jnp.float32)
+    ref = flash_attention_ref(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(out, ref, atol=atol, rtol=atol)
+
+
+def test_flash_attention_causality():
+    """Changing future tokens must not change past outputs."""
+    q = _rand((1, 256, 2, 64), jnp.float32, 1)
+    k = _rand((1, 256, 2, 64), jnp.float32, 2)
+    v = _rand((1, 256, 2, 64), jnp.float32, 3)
+    out1 = flash_attention(q, k, v, interpret=True)
+    k2 = k.at[:, 200:].set(99.0)
+    v2 = v.at[:, 200:].set(-99.0)
+    out2 = flash_attention(q, k2, v2, interpret=True)
+    np.testing.assert_allclose(out1[:, :200], out2[:, :200], atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# flash decode
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kh,hd", [
+    (2, 1024, 4, 2, 64),
+    (1, 512, 8, 8, 128),
+    (3, 768, 4, 1, 64),
+    (1, 300, 2, 2, 64),     # padding path
+])
+def test_flash_decode_matches_ref(b, s, h, kh, hd):
+    q = _rand((b, 1, h, hd), jnp.float32, 1)
+    ck = _rand((b, s, kh, hd), jnp.float32, 2)
+    cv = _rand((b, s, kh, hd), jnp.float32, 3)
+    valid = jnp.arange(s) <= (3 * s) // 4
+    out = flash_decode(q, ck, cv, valid, interpret=True)
+    ref = flash_decode_ref(q, ck, cv, valid)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_respects_validity():
+    """Invalid cache slots must not influence the output."""
+    b, s, h, hd = 1, 512, 2, 64
+    q = _rand((b, 1, h, hd), jnp.float32, 1)
+    ck = _rand((b, s, h, hd), jnp.float32, 2)
+    cv = _rand((b, s, h, hd), jnp.float32, 3)
+    valid = jnp.arange(s) < 100
+    out1 = flash_decode(q, ck, cv, valid, interpret=True)
+    ck2 = ck.at[:, 100:].set(123.0)
+    cv2 = cv.at[:, 100:].set(-123.0)
+    out2 = flash_decode(q, ck2, cv2, valid, interpret=True)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# rwkv wkv6
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,hd", [
+    (2, 128, 2, 32),
+    (1, 64, 4, 64),
+    (2, 96, 2, 32),      # padding path (96 < chunk 64*2)
+    (1, 256, 1, 16),
+])
+def test_wkv6_matches_ref(b, t, h, hd):
+    shape = (b, t, h, hd)
+    r, k, v = (_rand(shape, jnp.float32, i) for i in range(3))
+    w = jnp.exp(-jnp.exp(_rand(shape, jnp.float32, 3) - 2.0))
+    u = _rand((h, hd), jnp.float32, 4) * 0.5
+    s0 = _rand((b, h, hd, hd), jnp.float32, 5) * 0.1
+    o, sf = wkv6(r, k, v, w, u, s0, interpret=True)
+    oref, sref = wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(o, oref, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(sf, sref, atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_state_chaining():
+    """Running two halves with carried state == running the full sequence."""
+    b, t, h, hd = 1, 128, 2, 32
+    shape = (b, t, h, hd)
+    r, k, v = (_rand(shape, jnp.float32, i) for i in range(3))
+    w = jnp.exp(-jnp.exp(_rand(shape, jnp.float32, 3) - 2.0))
+    u = _rand((h, hd), jnp.float32, 4) * 0.5
+    s0 = jnp.zeros((b, h, hd, hd))
+    o_full, s_full = wkv6(r, k, v, w, u, s0, interpret=True)
+    o1, s1 = wkv6(r[:, :64], k[:, :64], v[:, :64], w[:, :64], u, s0,
+                  interpret=True)
+    o2, s2 = wkv6(r[:, 64:], k[:, 64:], v[:, 64:], w[:, 64:], u, s1,
+                  interpret=True)
+    np.testing.assert_allclose(jnp.concatenate([o1, o2], 1), o_full, atol=1e-4)
+    np.testing.assert_allclose(s2, s_full, atol=1e-4)

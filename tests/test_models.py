@@ -1,0 +1,198 @@
+"""Per-architecture smoke tests (assignment requirement): every one of the
+10 assigned archs instantiates a REDUCED variant of the same family and runs
+one forward + one train step on CPU, asserting shapes and no NaNs.  Plus
+decode-consistency and family-specific behaviours."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, PAPER_MODELS
+from repro.models import api, cnn
+from repro.models.common import count_params
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg, rng, s=S):
+    b = {"tokens": jax.random.randint(rng, (B, s), 0, cfg.vocab_size),
+         "labels": jax.random.randint(rng, (B, s), 0, cfg.vocab_size)}
+    if cfg.family == "audio":
+        b["frame_embeds"] = jax.random.normal(
+            rng, (B, cfg.encoder_seq, cfg.d_model)) * 0.02
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.num_image_tokens, cfg.d_model)) * 0.02
+    return b
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_smoke_forward_and_train_step(arch_id):
+    spec = ARCHS[arch_id]
+    cfg = spec.smoke
+    assert cfg.family == spec.config.family, "smoke must be the same family"
+    assert cfg.d_model <= 512 and cfg.num_layers <= 3
+    if cfg.is_moe:
+        assert cfg.num_experts <= 4
+    params = api.init_params(RNG, cfg)
+    batch = _batch(cfg, RNG)
+    loss, metrics = api.train_loss(params, batch, cfg, remat=False)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch_id}: NaN loss"
+    # one actual optimizer step
+    from repro.launch.steps import make_train_step
+    from repro.train.optimizer import AdamW
+    opt = AdamW(learning_rate=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    p2, o2, m = step(params, opt.init(params), batch)
+    assert not bool(jnp.isnan(m["loss"]))
+    # params changed
+    delta = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, p2)
+    assert max(jax.tree_util.tree_leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_smoke_prefill_decode_shapes(arch_id):
+    cfg = ARCHS[arch_id].smoke
+    params = api.init_params(RNG, cfg)
+    inputs = _batch(cfg, RNG)
+    inputs.pop("labels")
+    last, cache = api.prefill(params, inputs, cfg, cache_len=S + 4)
+    assert last.shape == (B, cfg.vocab_size)
+    logits, cache2 = api.decode_step(params, cache,
+                                     jnp.ones((B,), jnp.int32),
+                                     jnp.int32(S), cfg)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("arch_id", [
+    "deepseek-7b", "rwkv6-1.6b", "recurrentgemma-9b", "whisper-tiny",
+    "qwen2.5-32b", "mistral-nemo-12b", "llava-next-mistral-7b",
+])
+def test_decode_consistency(arch_id):
+    """prefill(S) + decode(1) == full forward at position S."""
+    cfg = ARCHS[arch_id].smoke
+    params = api.init_params(RNG, cfg)
+    s = 12
+    batch = _batch(cfg, RNG, s=s + 1)
+    toks = batch["tokens"]
+    mod = api.module_for(cfg)
+    if cfg.family in ("audio", "vlm"):
+        full_logits, _ = mod.forward(params, {k: v for k, v in batch.items()
+                                              if k != "labels"}, cfg)
+    else:
+        full_logits, _ = mod.forward(params, toks, cfg)
+    want = full_logits[:, -1]
+    pre = {k: (v[:, :s] if k == "tokens" else v) for k, v in batch.items()
+           if k != "labels"}
+    _, cache = api.prefill(params, pre, cfg, cache_len=s + 8)
+    got, _ = api.decode_step(params, cache, toks[:, s], jnp.int32(s), cfg)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_moe_decode_consistency_without_drops():
+    """Capacity-based MoE matches exactly when no tokens are dropped."""
+    cfg = ARCHS["granite-moe-3b-a800m"].smoke.replace(moe_capacity_factor=2.0)
+    params = api.init_params(RNG, cfg)
+    toks = jax.random.randint(RNG, (B, 13), 0, cfg.vocab_size)
+    mod = api.module_for(cfg)
+    full_logits, _ = mod.forward(params, toks, cfg)
+    _, cache = api.prefill(params, {"tokens": toks[:, :12]}, cfg, cache_len=20)
+    got, _ = api.decode_step(params, cache, toks[:, 12], jnp.int32(12), cfg)
+    np.testing.assert_allclose(np.asarray(full_logits[:, -1]), np.asarray(got),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_sliding_window_variant_limits_attention():
+    """long_500k dense variant: token beyond the window has no influence."""
+    cfg = ARCHS["deepseek-7b"].smoke.replace(attention_window=4)
+    params = api.init_params(RNG, cfg)
+    t1 = jax.random.randint(RNG, (1, 12), 0, cfg.vocab_size)
+    t2 = t1.at[0, 0].set((int(t1[0, 0]) + 7) % cfg.vocab_size)
+    mod = api.module_for(cfg)
+    l1, _ = mod.forward(params, t1, cfg)
+    l2, _ = mod.forward(params, t2, cfg)
+    # position 11 only sees positions 8..11 (window 4): unchanged by token 0
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               atol=1e-5)
+    assert float(jnp.max(jnp.abs(l1[0, 0] - l2[0, 0]))) > 1e-3
+
+
+def test_rwkv_state_is_constant_size():
+    cfg = ARCHS["rwkv6-1.6b"].smoke
+    c1 = api.cache_spec(cfg, batch=2, seq=100)
+    c2 = api.cache_spec(cfg, batch=2, seq=100000)
+    assert jax.tree_util.tree_map(lambda x: x.shape, c1) == \
+        jax.tree_util.tree_map(lambda x: x.shape, c2)
+
+
+def test_hybrid_cache_is_window_bounded():
+    cfg = ARCHS["recurrentgemma-9b"].smoke
+    spec = api.cache_spec(cfg, batch=2, seq=10_000)
+    biggest = max(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(spec))
+    # bounded by window (8 in smoke), layers and d_model — not by seq
+    assert biggest < 10_000
+
+
+def test_paper_cnn_sizes_match_paper():
+    """SqueezeNet ~5MB, ResNet-18 ~45MB, ResNeXt-50 ~98MB (paper §3)."""
+    from repro.models.common import param_bytes
+    expect = {"squeezenet": (3, 7), "resnet18": (40, 50), "resnext50": (85, 105)}
+    for aid, (lo, hi) in expect.items():
+        cfg = PAPER_MODELS[aid].config
+        p = cnn.init_params(jax.random.PRNGKey(0), cfg)
+        mb = param_bytes(p) / 1e6
+        assert lo <= mb <= hi, f"{aid}: {mb:.1f} MB outside [{lo},{hi}]"
+
+
+def test_cnn_forward_shapes():
+    for aid, spec in PAPER_MODELS.items():
+        cfg = spec.config
+        p = cnn.init_params(jax.random.PRNGKey(0), cfg)
+        out = cnn.forward(p, jnp.zeros((2, 224, 224, 3)), cfg)
+        assert out.shape == (2, 1000)
+        assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_pallas_and_jnp_paths_agree(monkeypatch):
+    """Model forward through the Pallas kernels == pure-jnp path."""
+    import repro.kernels.dispatch as kd
+    cfg = ARCHS["deepseek-7b"].smoke
+    params = api.init_params(RNG, cfg)
+    toks = jax.random.randint(RNG, (2, 128), 0, cfg.vocab_size)
+    mod = api.module_for(cfg)
+    kd._enabled_ops.cache_clear()
+    monkeypatch.setenv("REPRO_PALLAS", "0")
+    l_jnp, _ = mod.forward(params, toks, cfg)
+    kd._enabled_ops.cache_clear()
+    monkeypatch.setenv("REPRO_PALLAS", "1")
+    l_pl, _ = mod.forward(params, toks, cfg)
+    kd._enabled_ops.cache_clear()
+    monkeypatch.setenv("REPRO_PALLAS", "0")
+    np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_pl),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssm_chunked_prefill_matches_unchunked():
+    """Long-prompt stateful chunked prefill is exact (EXPERIMENTS §Perf F)."""
+    from repro.models import ssm
+    cfg = ARCHS["rwkv6-1.6b"].smoke
+    params = api.init_params(RNG, cfg)
+    toks = jax.random.randint(RNG, (2, 32), 0, cfg.vocab_size)
+    l1, s1 = ssm.prefill(params, toks, cfg)
+    l2, s2 = ssm.prefill(params, toks, cfg, chunk=8)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(s1),
+                    jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)

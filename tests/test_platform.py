@@ -1,0 +1,169 @@
+"""Serverless platform behaviour tests — each maps to a paper claim."""
+import numpy as np
+import pytest
+
+from repro.core import billing, metrics, resources, sla
+from repro.core.container import cold_start_breakdown
+from repro.core.function import FunctionSpec, Handler, MEMORY_TIERS
+from repro.core.keepalive import PrewarmSchedule, budget_ttl, run_with_prewarm
+from repro.core.simulator import Simulator
+from repro.core.workload import cold_probe, poisson, step_ramp, warm_burst
+
+H = Handler(name="t", base_cpu_seconds=0.2, bootstrap_cpu_seconds=1.0,
+            package_mb=45.0, peak_memory_mb=100.0)
+
+
+def _spec(m=1024):
+    return FunctionSpec(handler=H, memory_mb=m)
+
+
+# ---------------------------------------------------------------- billing
+def test_table1_prices_exact():
+    assert billing.price_per_100ms(128) == 0.000000208
+    assert billing.price_per_100ms(1536) == 0.000002501
+
+
+def test_billing_rounds_up_to_100ms():
+    assert billing.billed_ticks(0.001) == 1
+    assert billing.billed_ticks(0.100) == 1
+    assert billing.billed_ticks(0.101) == 2
+    assert billing.invocation_cost(0.25, 128) == 3 * 0.000000208
+
+
+# ------------------------------------------------------------- resources
+def test_cpu_share_proportional_then_saturates():
+    assert resources.cpu_share(512) == pytest.approx(0.5)
+    assert resources.cpu_share(1024) == 1.0
+    assert resources.cpu_share(1536) == 1.0  # paper: no gain past the knee
+
+
+def test_function_spec_rejects_oom_tier():
+    with pytest.raises(ValueError):
+        FunctionSpec(handler=Handler(name="big", base_cpu_seconds=1,
+                                     peak_memory_mb=429.0), memory_mb=384)
+
+
+def test_function_spec_rejects_oversized_package():
+    with pytest.raises(ValueError):
+        FunctionSpec(handler=Handler(name="huge", base_cpu_seconds=1,
+                                     package_mb=600.0), memory_mb=1024)
+
+
+# ------------------------------------------------------------ cold start
+def test_cold_breakdown_decreases_with_memory():
+    lo = cold_start_breakdown(_spec(128))
+    hi = cold_start_breakdown(_spec(1536))
+    assert lo.total_s > hi.total_s
+    assert lo.bootstrap_s > hi.bootstrap_s
+
+
+def test_cold_does_not_follow_warm_pattern():
+    """C4: warm scales ~1/cpu_share; cold has a big fixed component."""
+    warm_ratio = (resources.exec_time(H.base_cpu_seconds, 128)
+                  / resources.exec_time(H.base_cpu_seconds, 1024))
+    cold_ratio = (cold_start_breakdown(_spec(128)).total_s
+                  / cold_start_breakdown(_spec(1024)).total_s)
+    assert warm_ratio == pytest.approx(8.0)
+    assert cold_ratio < warm_ratio  # fixed provision work dominates
+
+
+# -------------------------------------------------------------- simulator
+def test_cold_probe_forces_all_cold():
+    sim = Simulator(_spec(), keepalive_s=480.0, seed=0, jitter=0.0)
+    recs = sim.run(cold_probe(n=5, gap_s=600.0))
+    assert all(r.cold for r in recs)
+    assert sim.cold_starts == 5
+
+
+def test_warm_burst_one_cold_rest_warm():
+    sim = Simulator(_spec(), seed=0, jitter=0.0)
+    recs = sim.run(warm_burst(n=25))
+    colds = [r for r in recs if r.cold]
+    assert len(colds) == 1 and colds[0].tag == "prime"
+    warm = [r for r in recs if r.tag == "warm"]
+    assert len(warm) == 25 and not any(r.cold for r in warm)
+
+
+def test_warm_latency_below_cold_latency():
+    sim = Simulator(_spec(), seed=0, jitter=0.0)
+    recs = sim.run(warm_burst())
+    warm = metrics.summarize(recs, warm_only=True)
+    cold_sim = Simulator(_spec(), seed=0, jitter=0.0)
+    cold = metrics.summarize(cold_sim.run(cold_probe()), cold_only=True)
+    assert cold.mean_response_s > 3 * warm.mean_response_s
+
+
+def test_scale_out_spawns_containers():
+    sim = Simulator(_spec(), seed=0)
+    recs = sim.run(step_ramp())
+    assert len({r.container_id for r in recs}) > 10  # concurrent scale-out
+    assert len(recs) == sum(range(10, 101, 10))      # 550 requests (Fig 7)
+
+
+def test_keepalive_expiry_forces_cold():
+    sim = Simulator(_spec(), keepalive_s=5.0, seed=0, jitter=0.0)
+    from repro.core.workload import Request
+    recs = sim.run([Request(0, 0.0), Request(1, 100.0)])
+    assert recs[0].cold and recs[1].cold
+
+
+def test_keepalive_retention_keeps_warm():
+    sim = Simulator(_spec(), keepalive_s=480.0, seed=0, jitter=0.0)
+    from repro.core.workload import Request
+    recs = sim.run([Request(0, 0.0), Request(1, 100.0)])
+    assert recs[0].cold and not recs[1].cold
+
+
+def test_max_containers_throttles_but_completes():
+    sim = Simulator(_spec(), seed=0, max_containers=2)
+    recs = sim.run(step_ramp(start_rps=10, step_rps=0, duration_s=2))
+    assert len(recs) == 20
+    assert len({r.container_id for r in recs}) <= 2
+
+
+def test_determinism():
+    a = Simulator(_spec(), seed=7).run(poisson(2.0, 30.0, seed=3))
+    b = Simulator(_spec(), seed=7).run(poisson(2.0, 30.0, seed=3))
+    assert [r.response_s for r in a] == [r.response_s for r in b]
+
+
+# -------------------------------------------------------------- keepalive
+def test_budget_ttl_monotone_in_budget():
+    t1 = budget_ttl(rate_rps=0.01, container_second_budget_per_req=10.0)
+    t2 = budget_ttl(rate_rps=0.01, container_second_budget_per_req=50.0)
+    assert t2 > t1
+
+
+def test_prewarm_eliminates_ramp_colds():
+    base = Simulator(_spec(), seed=0)
+    ramp = step_ramp()
+    base_recs = base.run(list(ramp))
+    base_colds = sum(r.cold for r in base_recs)
+    peak = max(10 + 10 * t for t in range(10))
+    recs, sim = run_with_prewarm(_spec(), list(ramp),
+                                 PrewarmSchedule(at_s=0.0, count=peak,
+                                                 lead_s=30.0), seed=0)
+    colds = sum(r.cold for r in recs)
+    assert base_colds > 50
+    assert colds < base_colds * 0.1
+
+
+# ---------------------------------------------------------------- SLA
+def test_bimodality_skews_p99():
+    """The paper's headline: colds skew the tail percentiles."""
+    sim = Simulator(_spec(), keepalive_s=75.0, seed=0)
+    recs = sim.run(poisson(0.02, 20000.0, seed=1))  # sparse => some colds
+    rep = sla.bimodality_report(recs)
+    assert 0.1 < rep["cold_fraction"] < 0.5        # bimodal, warm-majority
+    assert rep["p99_over_p50"] > 3.0               # tail skewed by colds
+    assert rep["mode_separation"] > 3.0
+    stringent = sla.SLA("s", p99_s=1.0).evaluate(recs)
+    assert stringent["violations"]["p99"]
+
+
+def test_dense_traffic_meets_sla():
+    sim = Simulator(_spec(1536), keepalive_s=480.0, seed=0)
+    recs = sim.run(poisson(5.0, 120.0, seed=1))
+    rep = sla.bimodality_report(recs)
+    assert rep["cold_fraction"] < 0.05
+    assert sla.SLA("i", p95_s=1.0).evaluate(recs)["ok"]

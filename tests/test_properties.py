@@ -1,0 +1,172 @@
+"""Hypothesis property-based tests over the system's invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import billing, resources
+from repro.core.function import MEMORY_TIERS
+from repro.core.simulator import Simulator
+from repro.core.function import FunctionSpec, Handler
+from repro.core.workload import poisson
+from repro.models import moe as moe_lib
+from repro.models.common import ModelConfig
+from repro.serving.batcher import Batcher, PendingRequest
+from repro.train.optimizer import AdamW
+
+tiers = st.sampled_from(MEMORY_TIERS)
+
+
+# ------------------------------------------------------------- billing
+@given(st.floats(1e-4, 900.0), tiers)
+def test_billing_nonneg_and_tick_rounded(secs, m):
+    c = billing.invocation_cost(secs, m)
+    assert c > 0
+    ticks = c / billing.price_per_100ms(m)
+    assert abs(ticks - round(ticks)) < 1e-6 * max(ticks, 1.0)
+    # enough ticks to cover the duration (up to float noise in the division)
+    assert round(ticks) == billing.billed_ticks(secs)
+    assert round(ticks) * 0.1 >= secs - 1e-9
+
+
+@given(st.floats(1e-3, 100.0), st.floats(1e-3, 100.0), tiers)
+def test_billing_monotone_in_duration(a, b, m):
+    lo, hi = sorted((a, b))
+    assert billing.invocation_cost(lo, m) <= billing.invocation_cost(hi, m)
+
+
+@given(tiers, tiers)
+def test_price_ladder_monotone_in_memory(a, b):
+    lo, hi = sorted((a, b))
+    assert billing.price_per_100ms(lo) <= billing.price_per_100ms(hi) + 1e-12
+
+
+# ------------------------------------------------------------ resources
+@given(tiers, tiers)
+def test_warm_exec_monotone_nonincreasing_in_memory(a, b):
+    lo, hi = sorted((a, b))
+    assert resources.exec_time(1.0, hi) <= resources.exec_time(1.0, lo) + 1e-12
+
+
+# ------------------------------------------------------------ simulator
+@given(st.integers(0, 2**31 - 1), st.floats(0.5, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_simulator_conservation(seed, rate):
+    """Every request is answered exactly once; responses end after arrival."""
+    spec = FunctionSpec(Handler(name="x", base_cpu_seconds=0.1), 512)
+    reqs = poisson(rate, 30.0, seed=seed % 1000)
+    recs = Simulator(spec, seed=seed).run(list(reqs))
+    assert len(recs) == len(reqs)
+    assert {r.rid for r in recs} == {r.rid for r in reqs}
+    for r in recs:
+        assert r.end_s > r.arrival_s
+        assert r.cost > 0
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_no_container_overlap(seed):
+    """A container never serves two requests at overlapping times."""
+    spec = FunctionSpec(Handler(name="x", base_cpu_seconds=0.3), 512)
+    recs = Simulator(spec, seed=seed).run(poisson(3.0, 20.0, seed=seed))
+    by_c = {}
+    for r in recs:
+        by_c.setdefault(r.container_id, []).append((r.start_exec_s, r.end_s))
+    for spans in by_c.values():
+        spans.sort()
+        for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+            assert s2 >= e1 - 1e-9
+
+
+# ------------------------------------------------------------ MoE router
+@given(st.integers(0, 10_000), st.integers(2, 4), st.sampled_from([4, 8]))
+@settings(max_examples=15, deadline=None)
+def test_moe_router_invariants(seed, k, e):
+    cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=64,
+                      num_experts=e, num_experts_per_tok=min(k, e),
+                      param_dtype="float32", compute_dtype="float32")
+    rng = jax.random.PRNGKey(seed)
+    p = moe_lib.moe_init(rng, cfg)
+    x = jax.random.normal(rng, (2, 8, 32))
+    y, aux = moe_lib.moe_apply(p, x, cfg)
+    assert y.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(y)))
+    assert float(aux) >= 0.0
+    # gates: top-k of softmax, renormalised -> sum to 1
+    logits = x @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gate = gate / gate.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(gate.sum(-1)), 1.0, atol=1e-5)
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=5, deadline=None)
+def test_moe_capacity_overflow_drops_not_corrupts(seed):
+    """With cf huge nothing is dropped; outputs with small cf differ only by
+    dropped tokens (never NaN)."""
+    cfg = ModelConfig(name="m", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=8, vocab_size=64,
+                      num_experts=4, num_experts_per_tok=2,
+                      param_dtype="float32", compute_dtype="float32")
+    rng = jax.random.PRNGKey(seed)
+    p = moe_lib.moe_init(rng, cfg)
+    x = jax.random.normal(rng, (1, 16, 16))
+    y_small, _ = moe_lib.moe_apply(p, x, cfg.replace(moe_capacity_factor=0.5))
+    y_big, _ = moe_lib.moe_apply(p, x, cfg.replace(moe_capacity_factor=4.0))
+    assert not bool(jnp.any(jnp.isnan(y_small)))
+    assert not bool(jnp.any(jnp.isnan(y_big)))
+
+
+# ------------------------------------------------------------ batcher
+@given(st.lists(st.tuples(st.floats(0, 10), st.integers(1, 12)),
+                min_size=1, max_size=40),
+       st.integers(1, 8), st.floats(0.001, 0.5))
+@settings(max_examples=25, deadline=None)
+def test_batcher_serves_everyone_once(reqs, max_batch, max_wait):
+    b = Batcher(max_batch=max_batch, max_wait_s=max_wait)
+    reqs = sorted(reqs)
+    for i, (t, n) in enumerate(reqs):
+        b.submit(PendingRequest(rid=i, tokens=list(range(n)), arrival_s=t))
+    seen = []
+    now = max(t for t, _ in reqs) + max_wait + 1
+    while b.queue:
+        batch = b.form_batch(now)
+        assert batch.tokens.shape[0] == len(batch.rids) <= max_batch
+        assert batch.tokens.shape[1] == int(batch.lengths.max())
+        seen.extend(batch.rids)
+    assert sorted(seen) == list(range(len(reqs)))
+
+
+# ------------------------------------------------------------ optimizer
+@given(st.integers(0, 10_000), st.floats(1e-4, 1e-2))
+@settings(max_examples=10, deadline=None)
+def test_adamw_descends_quadratic(seed, lr):
+    opt = AdamW(learning_rate=lr, weight_decay=0.0)
+    rng = jax.random.PRNGKey(seed)
+    target = jax.random.normal(rng, (8,))
+    params = {"w": jnp.zeros((8,))}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(params, g, state)
+    assert float(loss(params)) < l0
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_adamw_clip_bounds_update(seed):
+    """With clip, one step moves each param by at most ~lr*(1+wd...)."""
+    opt = AdamW(learning_rate=0.1, clip_norm=1.0, weight_decay=0.0)
+    rng = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(rng, (4,))}
+    state = opt.init(params)
+    g = {"w": jax.random.normal(jax.random.fold_in(rng, 1), (4,)) * 1e6}
+    p2, _, m = opt.update(params, g, state)
+    step_size = float(jnp.max(jnp.abs(p2["w"] - params["w"])))
+    assert step_size < 0.5  # bounded despite the huge gradient

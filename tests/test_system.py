@@ -1,0 +1,115 @@
+"""End-to-end system tests: the paper's claims (C1-C5) as executable asserts.
+
+These run the full platform (calibrated from real JAX CNN forward passes)
+through the paper's three experiments and assert the qualitative results the
+paper reports.  Uses the deterministic fallback calibration so CI timing
+noise cannot flip an assertion.
+"""
+import numpy as np
+import pytest
+
+from repro.core import advisor, sla
+from repro.core.function import PAPER_TIERS
+from repro.core.platform import ServerlessPlatform
+from repro.core.workload import poisson, warm_burst
+
+
+@pytest.fixture(scope="module")
+def plat():
+    return ServerlessPlatform(seed=0, use_fallback_calibration=True)
+
+
+def _warm_curve(plat, model):
+    xs, lat, cost = [], [], []
+    for m in PAPER_TIERS:
+        try:
+            spec = plat.deploy_paper_model(model, m)
+        except ValueError:
+            continue
+        rep = plat.run_warm_experiment(spec)
+        xs.append(m)
+        lat.append(rep.warm.mean_response_s)
+        cost.append(rep.warm.total_cost)
+    return xs, lat, cost
+
+
+@pytest.mark.parametrize("model", ["squeezenet", "resnet18", "resnext50"])
+def test_C2_warm_latency_decreases_then_flattens(plat, model):
+    xs, lat, _ = _warm_curve(plat, model)
+    assert lat[0] > lat[-1]                      # decreasing overall
+    knee = [l for m, l in zip(xs, lat) if m >= 1024]
+    assert max(knee) - min(knee) < 0.02 * lat[0]  # flat past the knee (C2)
+
+
+def test_C3_cost_dips_for_squeezenet(plat):
+    """'total cost ... does not necessarily increase with memory size':
+    the 100ms-tick quantization makes a faster tier outright cheaper."""
+    xs, _, cost = _warm_curve(plat, "squeezenet")
+    assert (np.diff(cost) < 0).any()
+    assert cost[-1] > min(cost)
+
+
+@pytest.mark.parametrize("model", ["squeezenet", "resnet18", "resnext50"])
+def test_C3_overprovisioning_past_knee_only_adds_cost(plat, model):
+    """Paper §3.5: beyond the CPU knee latency is flat but cost keeps
+    rising — 'a customer may incur additional costs of allocating more
+    resources than what the function needs'."""
+    xs, lat, cost = _warm_curve(plat, model)
+    knee = [(m, l, c) for m, l, c in zip(xs, lat, cost) if m >= 1024]
+    lats = [l for _, l, _ in knee]
+    costs = [c for _, _, c in knee]
+    assert (max(lats) - min(lats)) / lats[0] < 0.02   # latency flat
+    assert costs[-1] > 1.3 * costs[0]                 # cost keeps climbing
+
+
+@pytest.mark.parametrize("model", ["squeezenet", "resnet18", "resnext50"])
+def test_C1_C4_cold_exceeds_warm_and_decreases(plat, model):
+    lo_tier = {"squeezenet": 128, "resnet18": 256, "resnext50": 512}[model]
+    cold_lat = []
+    for m in (lo_tier, 1536):
+        spec = plat.deploy_paper_model(model, m)
+        rep = plat.run_cold_experiment(spec)
+        warm = plat.run_warm_experiment(spec)
+        assert rep.cold.mean_response_s > 2 * warm.warm.mean_response_s  # C1
+        cold_lat.append(rep.cold.mean_response_s)
+    assert cold_lat[0] > cold_lat[1]                                     # C4
+
+
+def test_C5_scalability_latency_acceptable_at_high_memory(plat):
+    spec = plat.deploy_paper_model("squeezenet", 1536)
+    rep = plat.run_scalability_experiment(spec)
+    assert rep.summary.n == 550                    # Fig 7 request count
+    assert rep.summary.p95_s < 5.0                 # "acceptable" at 1536
+
+
+def test_C5_scalability_latency_improves_with_memory(plat):
+    p95 = []
+    for m in (256, 1536):
+        spec = plat.deploy_paper_model("squeezenet", m)
+        rep = plat.run_scalability_experiment(spec)
+        p95.append(rep.summary.p95_s)
+    assert p95[1] < p95[0]
+
+
+def test_C1_bimodality_risks_stringent_sla(plat):
+    """The paper's conclusion, verbatim: bimodal latency risks SLAs."""
+    spec = plat.deploy_paper_model("resnet18", 1024)
+    recs, _ = plat.invoke(spec, poisson(0.01, 40000.0, seed=2),
+                          keepalive_s=60.0)
+    rep = sla.bimodality_report(recs)
+    assert rep["cold_fraction"] > 0.3
+    assert rep["mode_separation"] > 3.0
+    assert not sla.STRINGENT.evaluate(recs)["ok"]
+
+
+def test_advisor_recommends_cheapest_sla_tier(plat):
+    h = plat.deploy_paper_model("squeezenet", 1024).handler
+    best, reports, ok = advisor.recommend(
+        h, warm_burst(n=25), sla.SLA("x", p95_s=0.6),
+        tiers=PAPER_TIERS, seed=0)
+    assert ok
+    cheaper_ok = [r for r in reports if r.feasible and r.sla_ok]
+    assert best.total_cost == min(r.total_cost for r in cheaper_ok)
+    # and the recommendation is strictly cheaper than max provisioning
+    top = [r for r in reports if r.memory_mb == 1536][0]
+    assert best.total_cost <= top.total_cost
