@@ -19,7 +19,8 @@ def main() -> None:
                     help="use the paper's 2017 timings instead of measuring")
     args = ap.parse_args()
 
-    from benchmarks import keepalive_study, paper_figs, roofline_report
+    from benchmarks import (keepalive_study, paper_figs, policy_sweep,
+                            roofline_report)
     from repro.core.platform import ServerlessPlatform
 
     plat = ServerlessPlatform(
@@ -35,6 +36,7 @@ def main() -> None:
                lambda: paper_figs.scale_figs(plat),
                lambda: keepalive_study.ttl_frontier(plat),
                lambda: keepalive_study.prewarm_ablation(plat),
+               lambda: policy_sweep.policy_sweep(plat),
                lambda: roofline_report.roofline(mesh_tag="single"),
                lambda: roofline_report.roofline(mesh_tag="multi")):
         rows, block = fn()

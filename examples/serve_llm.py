@@ -39,7 +39,7 @@ for rid in range(10):
 served = {}
 while batcher.queue:
     now = time.perf_counter() - t0
-    batch = batcher.form_batch(now)
+    batch = batcher.form_batch(now, force=True)  # drain: all requests are in
     res = eng.generate(jnp.asarray(batch.tokens), n_new=8)
     done = time.perf_counter() - t0
     for rid in batch.rids:

@@ -1,0 +1,20 @@
+"""Policy-driven serverless cluster simulator (see DESIGN.md).
+
+Public surface:
+  * ClusterSimulator — the event loop (cluster.py)
+  * RequestRecord    — the per-request result row (events.py)
+  * BatchingConfig   — batching-aware container mode (router.py)
+  * policies         — placement / keep-alive / scaling policy classes
+"""
+from repro.core.cluster.cluster import ClusterSimulator
+from repro.core.cluster.events import RequestRecord
+from repro.core.cluster.policies import (AdaptiveTTL, FixedTTL,
+                                         LambdaImplicit, LeastLoadedPlacement,
+                                         LRUPlacement, MRUPlacement,
+                                         PredictiveWarmPool)
+from repro.core.cluster.router import BatchingConfig
+
+__all__ = ["ClusterSimulator", "RequestRecord", "BatchingConfig",
+           "AdaptiveTTL", "FixedTTL", "LambdaImplicit",
+           "LeastLoadedPlacement", "LRUPlacement", "MRUPlacement",
+           "PredictiveWarmPool"]

@@ -1,0 +1,391 @@
+"""Policy-driven discrete-event cluster simulator.
+
+Generalizes the original single-function ``Simulator`` event loop into a
+multi-function cluster with pluggable placement / keep-alive / scaling
+policies, optional per-container concurrency, and batching-aware fleets
+(``repro.serving.batcher`` wired into the event loop).
+
+Backwards compatibility is a hard invariant: with the default policy stack
+(MRU placement, fixed-TTL keep-alive, Lambda-implicit scaling, concurrency 1,
+no batching) the event sequence — heap tie-breaking, RNG draw order,
+container id allocation — is identical to the old monolith, so the produced
+``RequestRecord`` streams match bit-for-bit (see tests/test_cluster.py).
+
+Event kinds (events.py): ARRIVAL / REQUEUE feed the router; COMPLETE frees a
+container slot; EXPIRE evaluates the keep-alive deadline; PREWARM_READY
+warms a predictively-provisioned container; FLUSH fires a batching fleet's
+``max_wait_s`` deadline.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core import billing, resources
+from repro.core.cluster import events as ev
+from repro.core.cluster.events import EventQueue, RequestRecord
+from repro.core.cluster.policies import (FixedTTL, KeepalivePolicy,
+                                         LambdaImplicit, PlacementPolicy,
+                                         ScalingPolicy, make_keepalive,
+                                         make_placement, make_scaling,
+                                         warm_exec_estimate)
+from repro.core.cluster.router import BatchingConfig, Fleet, Router
+from repro.core.container import Container, State
+from repro.core.function import FunctionSpec
+from repro.core.workload import Request
+from repro.serving.batcher import PendingRequest
+
+REQUEUE = "requeue"         # throttled arrival re-entering the loop
+BATCH_RETRY = "batch_retry"  # throttled formed batch retrying as a unit
+_ARRIVAL_HISTORY_S = 600.0   # how much arrival history fleets retain
+
+
+class ClusterSimulator:
+    """Multi-function serverless cluster with pluggable scheduling policies.
+
+    Parameters
+    ----------
+    specs: one FunctionSpec, a list of them, or ``{name: spec}``.  Requests
+        route by ``Request.fn`` (empty -> the first/default fleet).
+    placement / keepalive / scaling: policy instances or registry names
+        (``"mru"|"lru"|"least_loaded"``, ``"fixed"|"adaptive"``,
+        ``"lambda"|"predictive"``).
+    concurrency: in-flight requests a single container may hold; requests
+        beyond the first slow each other down by ``contention`` each.
+    batching: a ``BatchingConfig`` applied to every fleet, or a
+        ``{fleet_name: BatchingConfig}`` for per-function batching.
+    max_containers: shared cluster-wide cap across all fleets (0 = unlimited).
+    """
+
+    def __init__(self, specs: Union[FunctionSpec, list, dict], *,
+                 placement="mru", keepalive=None, scaling=None,
+                 keepalive_s: float = 480.0, seed: int = 0,
+                 jitter: float = 0.03, max_containers: int = 0,
+                 concurrency: int = 1, contention: float = 0.3,
+                 batching: Union[BatchingConfig, dict, None] = None):
+        if isinstance(specs, FunctionSpec):
+            specs = {specs.name: specs}
+        elif isinstance(specs, (list, tuple)):
+            specs = {s.name: s for s in specs}
+        if not specs:
+            raise ValueError("ClusterSimulator needs at least one function")
+        batch_by_fleet = (batching if isinstance(batching, dict)
+                          else {name: batching for name in specs})
+        fleets = {name: Fleet(name, spec, batch_by_fleet.get(name))
+                  for name, spec in specs.items()}
+        self.router = Router(fleets, default=next(iter(fleets)))
+
+        self.placement: PlacementPolicy = make_placement(placement)
+        self.keepalive: KeepalivePolicy = make_keepalive(keepalive,
+                                                         keepalive_s)
+        self.scaling: ScalingPolicy = make_scaling(scaling)
+
+        self.rng = np.random.default_rng(seed)
+        # Fast paths that also pin default-stack bit-parity: FixedTTL never
+        # needs lazy idle re-checks, LambdaImplicit never tracks arrivals.
+        self._lazy_evict = not isinstance(self.keepalive, FixedTTL)
+        self._track_arrivals = not isinstance(self.scaling, LambdaImplicit)
+        self.jitter = jitter
+        self.max_containers = max_containers
+        self.concurrency = max(1, int(concurrency))
+        self.contention = contention
+        self.records: list[RequestRecord] = []
+        self.prewarms = 0
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def fleets(self) -> dict[str, Fleet]:
+        return self.router.fleets
+
+    @property
+    def containers(self) -> dict[int, Container]:
+        out: dict[int, Container] = {}
+        for f in self.fleets.values():
+            out.update(f.containers)
+        return out
+
+    @property
+    def cold_starts(self) -> int:
+        return sum(f.cold_starts for f in self.fleets.values())
+
+    @property
+    def evictions(self) -> int:
+        return sum(f.evictions for f in self.fleets.values())
+
+    # ------------------------------------------------------------------ util
+    def _jit(self, x: float) -> float:
+        if self.jitter <= 0:
+            return x
+        return float(x * self.rng.lognormal(0.0, self.jitter))
+
+    def _service_time(self, fleet: Fleet) -> float:
+        h = fleet.spec.handler
+        return self._jit(resources.exec_time(h.base_cpu_seconds,
+                                             fleet.spec.memory_mb))
+
+    def _active_total(self) -> int:
+        return sum(f.active_count() for f in self.fleets.values())
+
+    def _schedule_expire(self, q: EventQueue, fleet: Fleet, cid: int,
+                         deadline: float) -> None:
+        if deadline > fleet.expire_sched.get(cid, -np.inf):
+            fleet.expire_sched[cid] = deadline
+            q.push(deadline, ev.EXPIRE, (fleet.name, cid))
+
+    # ------------------------------------------------------------------- run
+    def run(self, requests: list) -> list[RequestRecord]:
+        q = EventQueue()
+        for r in requests:
+            q.push(r.arrival_s, ev.ARRIVAL, r)
+
+        while q:
+            t, _, kind, payload = q.pop()
+            if kind == ev.COMPLETE:
+                self._on_complete(t, payload)
+            elif kind == ev.EXPIRE:
+                self._on_expire(q, t, payload)
+            elif kind == ev.PREWARM_READY:
+                self._on_prewarm_ready(q, t, payload)
+            elif kind == ev.FLUSH:
+                self._on_flush(q, t, payload)
+            elif kind == BATCH_RETRY:
+                fname, reqs = payload
+                self._dispatch(q, self.fleets[fname], t, reqs)
+            else:  # ARRIVAL / REQUEUE
+                self._on_arrival(q, t, payload, fresh=(kind == ev.ARRIVAL))
+        return self.records
+
+    # ------------------------------------------------------------- complete
+    def _on_complete(self, t: float, payload) -> None:
+        fname, cid, end = payload
+        fleet = self.fleets[fname]
+        ends = fleet.inflight_ends.get(cid)
+        if ends:
+            ends.remove(end)
+            if not ends:
+                del fleet.inflight_ends[cid]
+        c = fleet.containers[cid]
+        if fleet.inflight(cid) == 0 and c.state != State.EVICTED:
+            c.state = State.WARM
+            fleet.idle.append((t, cid))
+
+    # --------------------------------------------------------------- expire
+    def _on_expire(self, q: EventQueue, t: float, payload) -> None:
+        fname, cid = payload
+        fleet = self.fleets[fname]
+        c = fleet.containers.get(cid)
+        if not c or c.state != State.WARM:
+            return
+        ttl = self.keepalive.ttl(fname)
+        if t - c.last_used_at >= ttl - 1e-9:
+            fleet.evict(cid)
+        else:
+            # Not yet expired under the *current* TTL (it may have grown, or
+            # the container was reused).  A reuse already scheduled a later
+            # check; only adaptive TTL growth needs a fresh one.
+            self._schedule_expire(q, fleet, cid, c.last_used_at + ttl)
+
+    # -------------------------------------------------------------- prewarm
+    def _on_prewarm_ready(self, q: EventQueue, t: float, payload) -> None:
+        fname, cid = payload
+        fleet = self.fleets[fname]
+        fleet.pending_prewarms -= 1
+        fleet.prewarm_etas.remove(t)
+        c = fleet.containers[cid]
+        if c.state != State.PROVISIONING:
+            return
+        c.state = State.WARM
+        c.ready_at = t
+        c.last_used_at = t
+        fleet.idle.append((t, cid))
+        self._schedule_expire(q, fleet, cid, t + self.keepalive.ttl(fname))
+
+    def _maybe_prewarm(self, q: EventQueue, fleet: Fleet, t: float) -> None:
+        if not self._track_arrivals:     # LambdaImplicit never prewarms
+            return
+        n = self.scaling.prewarm_count(
+            now=t, arrivals=fleet.arrivals,
+            warm_exec_s=warm_exec_estimate(fleet.spec),
+            active=fleet.active_count())
+        for _ in range(n):
+            if self.max_containers and \
+                    self._active_total() >= self.max_containers:
+                break
+            c = Container(fleet.spec, created_at=t)
+            fleet.add_container(c)
+            fleet.pending_prewarms += 1
+            self.prewarms += 1
+            setup = self._jit(c.cold_breakdown().total_s)
+            fleet.prewarm_etas.append(t + setup)
+            q.push(t + setup, ev.PREWARM_READY, (fleet.name, c.cid))
+
+    # -------------------------------------------------------------- arrival
+    def _on_arrival(self, q: EventQueue, t: float, req: Request,
+                    fresh: bool) -> None:
+        fleet = self.router.route(req)
+        if fresh:
+            if fleet.last_arrival_s is not None:
+                self.keepalive.observe_gap(fleet.name,
+                                           t - fleet.last_arrival_s)
+            fleet.last_arrival_s = t
+            if self._track_arrivals:
+                fleet.arrivals.append(t)
+                if fleet.arrivals[0] < t - _ARRIVAL_HISTORY_S:
+                    fleet.arrivals = [a for a in fleet.arrivals
+                                      if a >= t - _ARRIVAL_HISTORY_S]
+                self._maybe_prewarm(q, fleet, t)
+
+        if fleet.batcher is not None:
+            fleet.batcher.submit(PendingRequest(
+                rid=req.rid, tokens=[], arrival_s=t, n_new=0))
+            fleet.pending_reqs[req.rid] = req
+            if fleet.batcher.ready(t):
+                self._on_flush(q, t, fleet.name)
+            else:
+                self._schedule_flush(q, fleet)
+            return
+
+        self._dispatch(q, fleet, t, [req])
+
+    # ---------------------------------------------------------------- flush
+    def _schedule_flush(self, q: EventQueue, fleet: Fleet) -> None:
+        """Push one FLUSH at the queue head's deadline, deduplicated —
+        deadlines only move forward as the head advances."""
+        nxt = fleet.batcher.next_flush_at()
+        if nxt is not None and nxt > fleet.flush_sched_t:
+            fleet.flush_sched_t = nxt
+            q.push(nxt, ev.FLUSH, fleet.name)
+
+    def _on_flush(self, q: EventQueue, t: float, fname: str) -> None:
+        fleet = self.fleets[fname]
+        while True:
+            batch = fleet.batcher.form_batch(t)
+            if batch is None:
+                break
+            reqs = [fleet.pending_reqs.pop(rid) for rid in batch.rids]
+            self._dispatch(q, fleet, t, reqs)
+        self._schedule_flush(q, fleet)
+
+    # ------------------------------------------------------------- dispatch
+    def _lazy_evict_stale(self, fleet: Fleet, now: float) -> None:
+        """Adaptive TTLs can *shrink* after an expire event was scheduled;
+        evict idle containers the current TTL says are dead before placing.
+        Never runs under FixedTTL, whose scheduled expiries are exact (and
+        whose tie-breaking the bit-parity contract pins)."""
+        ttl = self.keepalive.ttl(fleet.name)
+        for _, cid in fleet.idle:
+            c = fleet.containers[cid]
+            if c.state == State.WARM and now - c.last_used_at >= ttl - 1e-9:
+                fleet.evict(cid)
+
+    def _candidates(self, fleet: Fleet, now: float) -> list:
+        if self._lazy_evict:
+            self._lazy_evict_stale(fleet, now)
+        fleet.prune_idle()
+        if self.concurrency <= 1:
+            return fleet.idle
+        return [(c.last_used_at, cid) for cid in fleet.live
+                for c in (fleet.containers[cid],)
+                if c.state in (State.WARM, State.BUSY)
+                and fleet.inflight(cid) < self.concurrency]
+
+    def _dispatch(self, q: EventQueue, fleet: Fleet, t: float,
+                  reqs: list) -> None:
+        """Place ``reqs`` (a single request, or one formed batch) on a warm
+        container or cold-start one, honoring the shared container cap."""
+        inflight = ({cid: fleet.inflight(cid) for cid in fleet.live}
+                    if (self.concurrency > 1 or self.placement.needs_inflight)
+                    else {})
+        cands = self._candidates(fleet, t)
+        chosen: Optional[Container] = None
+        cold = False
+        cid = self.placement.choose(cands, inflight) if cands else None
+        if cid is not None:
+            chosen = fleet.containers[cid]
+            fleet.idle = [(ts, i) for ts, i in fleet.idle if i != cid]
+        else:
+            if self.max_containers and \
+                    self._active_total() >= self.max_containers:
+                if not self._make_room(q, fleet, t, reqs):
+                    return                      # requeued behind a busy slot
+            cold = True
+            chosen = Container(fleet.spec, created_at=t)
+            fleet.add_container(chosen)
+            fleet.cold_starts += 1
+
+        # ---- timing: exec draw first, then cold-setup draw (RNG parity)
+        exec_s = self._service_time(fleet)
+        b = len(reqs)
+        if b > 1:
+            exec_s *= 1.0 + fleet.batching.amortization * (b - 1)
+        k = fleet.inflight(chosen.cid) + 1
+        if k > 1:
+            exec_s *= 1.0 + self.contention * (k - 1)
+        if cold:
+            setup = self._jit(chosen.cold_breakdown().total_s)
+            start = t + setup
+            chosen.ready_at = start
+        else:
+            # a concurrency > 1 follow-up placed on a still-provisioning
+            # container queues until the cold start finishes
+            start = max(t, chosen.ready_at)
+        end = start + exec_s + resources.NETWORK_OVERHEAD_S
+
+        chosen.state = State.BUSY
+        # max(): with concurrency > 1 a later, shorter request must not move
+        # the container's recency backwards past a still-running one
+        chosen.last_used_at = max(chosen.last_used_at, end)
+        chosen.invocations += b
+        fleet.inflight_ends.setdefault(chosen.cid, []).append(end)
+        q.push(end, ev.COMPLETE, (fleet.name, chosen.cid, end))
+        self._schedule_expire(q, fleet, chosen.cid,
+                              end + self.keepalive.ttl(fleet.name))
+
+        # ---- billing + records (batch wall time amortized per request)
+        share = exec_s / b
+        cost = billing.invocation_cost(share, fleet.spec.memory_mb)
+        for req in reqs:
+            self.records.append(RequestRecord(
+                rid=req.rid, arrival_s=req.arrival_s, start_exec_s=start,
+                end_s=end, cold=cold, prediction_s=exec_s,
+                exec_s=share if b > 1 else exec_s, cost=cost,
+                container_id=chosen.cid, memory_mb=fleet.spec.memory_mb,
+                tag=req.tag, fn=fleet.name, batch_size=b))
+
+    # ------------------------------------------------------------ throttling
+    def _make_room(self, q: EventQueue, fleet: Fleet, t: float,
+                   reqs: list) -> bool:
+        """At the shared cap with no local warm capacity.  Prefer the old
+        Simulator's behaviour — queue behind this fleet's earliest-free
+        container; across fleets, evict another fleet's LRU idle container
+        to make room, else wait for the cluster-wide earliest completion.
+        Returns True when the caller may proceed with a cold start."""
+        until = fleet.earliest_free_s()
+        if until is not None:
+            self._requeue(q, fleet, until, reqs)
+            return False
+        victims = [(f.containers[cid].last_used_at, cid, f)
+                   for f in self.fleets.values() if f is not fleet
+                   for cid in f.live if f.containers[cid].state == State.WARM]
+        if victims:
+            _, vcid, vfleet = min(victims)
+            vfleet.evict(vcid)
+            return True
+        ends = [f.earliest_free_s() for f in self.fleets.values()]
+        ends = [e for e in ends if e is not None]
+        if ends:
+            self._requeue(q, fleet, min(ends), reqs)
+            return False
+        return True   # nothing to wait for: exceed the cap rather than drop
+
+    def _requeue(self, q: EventQueue, fleet: Fleet, until: float,
+                 reqs: list) -> None:
+        """Throttled work re-enters at ``until``.  A formed batch retries
+        dispatch as a unit — re-submitting members to the batcher would
+        disband it and charge another max_wait_s per throttle round."""
+        if fleet.batcher is not None:
+            q.push(until, BATCH_RETRY, (fleet.name, reqs))
+        else:
+            for req in reqs:
+                q.push(until, REQUEUE, req)

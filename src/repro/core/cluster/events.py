@@ -1,0 +1,68 @@
+"""Event primitives for the cluster simulator.
+
+The event loop is a single binary heap keyed on ``(time, seq)``: ``seq`` is a
+monotonically increasing tie-breaker, so two events at the same timestamp pop
+in push order.  This is the exact discipline of the original monolithic
+``Simulator.run()`` — preserving it (one shared sequence counter, arrivals
+pushed first, completion before expiry at dispatch) is what makes the default
+policy stack reproduce the old records bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+# event kinds --------------------------------------------------------------
+ARRIVAL = "arrival"            # a workload Request reaches the router
+COMPLETE = "complete"          # a container finishes a request (or batch)
+EXPIRE = "expire"              # keep-alive deadline check for a container
+PREWARM_READY = "prewarm_ready"  # a predictively-provisioned container warms
+FLUSH = "flush"                # a batching fleet's max_wait deadline
+
+
+class EventQueue:
+    """Min-heap of ``(time, seq, kind, payload)`` with a shared seq counter."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def pop(self):
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One served request — the unit every metric/SLA report consumes.
+
+    ``exec_s`` is the request's billed execution share (for a batch of B the
+    batch wall time is amortized B ways); ``prediction_s`` is the wall time
+    the model actually ran for (the whole batch for batched requests).
+    """
+    rid: int
+    arrival_s: float
+    start_exec_s: float
+    end_s: float
+    cold: bool
+    prediction_s: float
+    exec_s: float
+    cost: float
+    container_id: int
+    memory_mb: int
+    tag: str = ""
+    fn: str = ""
+    batch_size: int = 1
+
+    @property
+    def response_s(self) -> float:
+        return self.end_s - self.arrival_s

@@ -1,0 +1,203 @@
+"""Pluggable scheduling policies for the ClusterSimulator.
+
+Three orthogonal axes, each with the Lambda-2017 default first (the default
+stack reproduces the old monolithic ``Simulator`` bit-for-bit):
+
+  * PlacementPolicy — which warm container gets the request.
+      MRUPlacement (default), LRUPlacement, LeastLoadedPlacement.
+  * KeepalivePolicy — when an idle container is evicted.
+      FixedTTL (default), AdaptiveTTL (inter-arrival histogram, the
+      "keep warm at least as long as the observed gaps" policy the paper's
+      §5 asks for declaratively).
+  * ScalingPolicy — when containers are provisioned ahead of demand.
+      LambdaImplicit (default: one per concurrent request, nothing ahead),
+      PredictiveWarmPool (Knative-style: size the warm pool from the recent
+      arrival rate via ``repro.core.autoscaler.Autoscaler``).
+
+Policies are deliberately tiny value objects: the cluster owns all mutable
+fleet state and calls into them with explicit arguments, so the same policy
+instance can drive several fleets and runs stay deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import resources
+from repro.core.autoscaler import Autoscaler
+
+
+# ------------------------------------------------------------------ placement
+class PlacementPolicy:
+    """Choose a container id among ``candidates`` = [(last_used_s, cid)]."""
+
+    name = "base"
+    needs_inflight = False   # set when choose() reads the inflight dict
+
+    def choose(self, candidates: list, inflight: dict) -> Optional[int]:
+        raise NotImplementedError
+
+
+class MRUPlacement(PlacementPolicy):
+    """Most-recently-used reuse (Lambda observed behaviour; best locality)."""
+
+    name = "mru"
+
+    def choose(self, candidates, inflight):
+        return max(candidates)[1] if candidates else None
+
+
+class LRUPlacement(PlacementPolicy):
+    """Least-recently-used — spreads load, keeps the whole pool warm."""
+
+    name = "lru"
+
+    def choose(self, candidates, inflight):
+        return min(candidates)[1] if candidates else None
+
+
+class LeastLoadedPlacement(PlacementPolicy):
+    """Fewest in-flight requests first (ties broken MRU) — the natural
+    partner of per-container ``concurrency > 1``."""
+
+    name = "least_loaded"
+    needs_inflight = True
+
+    def choose(self, candidates, inflight):
+        if not candidates:
+            return None
+        return min(candidates,
+                   key=lambda c: (inflight.get(c[1], 0), -c[0], -c[1]))[1]
+
+
+# ------------------------------------------------------------------ keepalive
+class KeepalivePolicy:
+    """TTL source; the cluster schedules/evaluates expiry deadlines with it."""
+
+    name = "base"
+
+    def observe_gap(self, fn: str, gap_s: float) -> None:
+        """Called once per arrival with the inter-arrival gap on that fleet."""
+
+    def ttl(self, fn: str) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedTTL(KeepalivePolicy):
+    """Lambda baseline: evict after a fixed idle TTL."""
+
+    ttl_s: float = 480.0
+    name = "fixed"
+
+    def ttl(self, fn: str = "") -> float:
+        return self.ttl_s
+
+
+class AdaptiveTTL(KeepalivePolicy):
+    """Histogram-adaptive keep-alive (serverless-in-the-wild style).
+
+    Tracks per-function inter-arrival gaps and keeps containers warm for a
+    high percentile of the observed gap distribution times a safety margin.
+    On the paper's 10-minute-gap trace this learns TTL > 600 s and converts
+    the all-cold baseline into warm hits; on dense traffic it shrinks the
+    idle tail the provider pays for.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, *, base_ttl_s: float = 480.0, percentile: float = 99.0,
+                 margin: float = 1.2, min_ttl_s: float = 30.0,
+                 max_ttl_s: float = 3600.0, window: int = 256):
+        self.base_ttl_s = base_ttl_s
+        self.percentile = percentile
+        self.margin = margin
+        self.min_ttl_s = min_ttl_s
+        self.max_ttl_s = max_ttl_s
+        self.window = window
+        self._gaps: dict[str, list] = {}
+
+    def observe_gap(self, fn: str, gap_s: float) -> None:
+        gaps = self._gaps.setdefault(fn, [])
+        gaps.append(gap_s)
+        if len(gaps) > self.window:
+            del gaps[0]
+
+    def ttl(self, fn: str = "") -> float:
+        gaps = self._gaps.get(fn)
+        if not gaps:
+            return self.base_ttl_s
+        t = float(np.percentile(gaps, self.percentile)) * self.margin
+        return float(np.clip(t, self.min_ttl_s, self.max_ttl_s))
+
+
+# -------------------------------------------------------------------- scaling
+class ScalingPolicy:
+    """Ahead-of-demand provisioning decisions, called on every arrival."""
+
+    name = "base"
+
+    def prewarm_count(self, *, now: float, arrivals: list, warm_exec_s: float,
+                      active: int) -> int:
+        """How many extra containers to start provisioning right now."""
+        raise NotImplementedError
+
+
+class LambdaImplicit(ScalingPolicy):
+    """Lambda semantics: scale-out only happens on demand (a cold start per
+    request with no warm capacity); never provisions ahead."""
+
+    name = "lambda"
+
+    def prewarm_count(self, *, now, arrivals, warm_exec_s, active):
+        return 0
+
+
+@dataclasses.dataclass
+class PredictiveWarmPool(ScalingPolicy):
+    """Knative-style: keep ``ceil(rate * service_time * margin)`` warm."""
+
+    autoscaler: Autoscaler = dataclasses.field(default_factory=Autoscaler)
+    name = "predictive"
+
+    def prewarm_count(self, *, now, arrivals, warm_exec_s, active):
+        desired = self.autoscaler.desired_pool(arrivals, now, warm_exec_s)
+        return max(0, desired - active)
+
+
+# ------------------------------------------------------------------ registry
+PLACEMENTS = {"mru": MRUPlacement, "lru": LRUPlacement,
+              "least_loaded": LeastLoadedPlacement}
+
+
+def make_placement(p) -> PlacementPolicy:
+    if isinstance(p, PlacementPolicy):
+        return p
+    return PLACEMENTS[p]()
+
+
+def make_keepalive(k, default_ttl_s: float = 480.0) -> KeepalivePolicy:
+    if isinstance(k, KeepalivePolicy):
+        return k
+    if k in (None, "fixed"):
+        return FixedTTL(default_ttl_s)
+    if k == "adaptive":
+        return AdaptiveTTL(base_ttl_s=default_ttl_s)
+    raise KeyError(f"unknown keepalive policy {k!r}")
+
+
+def make_scaling(s) -> ScalingPolicy:
+    if isinstance(s, ScalingPolicy):
+        return s
+    if s in (None, "lambda"):
+        return LambdaImplicit()
+    if s == "predictive":
+        return PredictiveWarmPool()
+    raise KeyError(f"unknown scaling policy {s!r}")
+
+
+def warm_exec_estimate(spec) -> float:
+    """Deterministic warm service-time estimate for scaling decisions."""
+    return resources.exec_time(spec.handler.base_cpu_seconds, spec.memory_mb)

@@ -1,0 +1,102 @@
+"""Request routing and per-function fleet state.
+
+A ``Fleet`` is everything the cluster tracks for one deployed
+``FunctionSpec``: its containers, the warm-idle list, in-flight completion
+times, the arrival history the scaling policy reads, and (optionally) a
+``repro.serving.batcher.Batcher`` when the fleet runs in batching mode.
+
+The ``Router`` maps a workload ``Request`` to a fleet by the request's
+``fn`` field (empty string routes to the default fleet), which is what lets
+one cluster serve several functions under a shared container cap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.container import Container, State
+from repro.core.function import FunctionSpec
+from repro.serving.batcher import Batcher
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchingConfig:
+    """Batching-aware container mode.
+
+    Requests queue at the fleet and flush as one batch when ``max_batch``
+    accumulate or ``max_wait_s`` elapses since the oldest queued request.
+    A batch of B runs for ``exec * (1 + amortization * (B - 1))`` wall time
+    — i.e. marginal requests cost ``amortization`` of a full pass — and each
+    request is billed the per-request share of that wall time.
+    """
+    max_batch: int = 8
+    max_wait_s: float = 0.25
+    amortization: float = 0.25
+
+
+class Fleet:
+    def __init__(self, name: str, spec: FunctionSpec,
+                 batching: Optional[BatchingConfig] = None):
+        self.name = name
+        self.spec = spec
+        self.batching = batching
+        self.batcher = (Batcher(max_batch=batching.max_batch,
+                                max_wait_s=batching.max_wait_s)
+                        if batching else None)
+        self.pending_reqs: dict[int, object] = {}  # rid -> queued Request
+        self.containers: dict[int, Container] = {}
+        self.live: set[int] = set()               # non-EVICTED cids
+        self.idle: list[tuple[float, int]] = []   # (completed_at, cid)
+        self.inflight_ends: dict[int, list] = {}  # cid -> in-flight end times
+        self.expire_sched: dict[int, float] = {}  # cid -> latest expire event
+        self.flush_sched_t: float = float("-inf")  # latest scheduled FLUSH
+        self.prewarm_etas: list[float] = []       # PREWARM_READY times due
+        self.arrivals: list[float] = []           # scaling-policy history
+        self.last_arrival_s: Optional[float] = None
+        self.pending_prewarms = 0
+        self.cold_starts = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    def add_container(self, c: Container) -> None:
+        self.containers[c.cid] = c
+        self.live.add(c.cid)
+
+    def evict(self, cid: int) -> None:
+        self.containers[cid].state = State.EVICTED
+        self.live.discard(cid)
+        self.evictions += 1
+
+    def active_count(self) -> int:
+        """Containers that occupy cluster capacity.  Provisioning prewarms
+        are already in ``containers`` (state PROVISIONING), so the live set
+        covers them."""
+        return len(self.live)
+
+    def prune_idle(self) -> None:
+        self.idle = [(ts, cid) for ts, cid in self.idle
+                     if self.containers[cid].state == State.WARM]
+
+    def inflight(self, cid: int) -> int:
+        return len(self.inflight_ends.get(cid, ()))
+
+    def earliest_free_s(self) -> Optional[float]:
+        """Earliest time this fleet gains serving capacity: a running
+        request completing, or a pending prewarm becoming warm."""
+        ends = [e for ends in self.inflight_ends.values() for e in ends]
+        ends += self.prewarm_etas
+        return min(ends) if ends else None
+
+
+class Router:
+    def __init__(self, fleets: dict[str, Fleet], default: str):
+        self.fleets = fleets
+        self.default = default
+
+    def route(self, req) -> Fleet:
+        fn = getattr(req, "fn", "") or self.default
+        try:
+            return self.fleets[fn]
+        except KeyError:
+            raise KeyError(f"request {req.rid} targets unknown function "
+                           f"{fn!r}; deployed: {sorted(self.fleets)}")

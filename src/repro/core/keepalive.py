@@ -5,11 +5,16 @@ The simulator's baseline is Lambda's fixed idle TTL.  This module adds the
 policies the paper asks for, plus the analysis connecting TTL to the
 cost/latency frontier:
 
-  * FixedTTL        — Lambda baseline.
+  * FixedTTL        — Lambda baseline (drives ClusterSimulator evictions).
+  * AdaptiveTTL     — histogram-adaptive TTL from observed inter-arrival
+                      gaps (drives ClusterSimulator evictions when selected).
   * BudgetTTL       — largest TTL whose provider-side container-seconds stay
                       under a budget for an expected request rate.
   * PrewarmSchedule — keep N containers warm ahead of a known ramp
                       (predictive pre-warm; eliminates ramp colds entirely).
+
+FixedTTL/AdaptiveTTL are the ``repro.core.cluster.policies`` classes,
+re-exported here so keep-alive studies import from one place.
 """
 from __future__ import annotations
 
@@ -17,14 +22,10 @@ import dataclasses
 
 import numpy as np
 
+# re-exports: the cluster's keep-alive policies ARE the study objects now
+from repro.core.cluster.policies import AdaptiveTTL, FixedTTL  # noqa: F401
 from repro.core.function import FunctionSpec
-from repro.core.simulator import Simulator
 from repro.core.workload import Request
-
-
-@dataclasses.dataclass(frozen=True)
-class FixedTTL:
-    ttl_s: float = 480.0
 
 
 def cold_probability(ttl_s: float, rate_rps: float) -> float:
@@ -63,6 +64,7 @@ class PrewarmSchedule:
 
 def run_with_prewarm(spec: FunctionSpec, requests: list,
                      schedule: PrewarmSchedule, **sim_kw):
+    from repro.core.simulator import Simulator
     sim = Simulator(spec, **sim_kw)
     merged = sorted(requests + schedule.requests(), key=lambda r: r.arrival_s)
     records = sim.run(merged)

@@ -3,15 +3,21 @@
 This is the top of the paper's stack: an OpenWhisk/Lambda-style event system
 over the container/scheduler/billing substrate, with the paper's three CNN
 payloads pre-registered and modern ``repro.serving`` handlers attachable.
+
+The platform now fronts the policy-driven ``repro.core.cluster`` subsystem:
+construct it with ``placement= / keepalive= / scaling= / concurrency= /
+batching=`` to move off the Lambda-2017 defaults, and use ``invoke_fleet``
+to serve every deployed function from one shared cluster.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 from repro.core import calibration, metrics, sla
+from repro.core.cluster import BatchingConfig, ClusterSimulator, FixedTTL
 from repro.core.function import FunctionSpec, Handler
-from repro.core.simulator import Simulator
 from repro.core.workload import cold_probe, step_ramp, warm_burst
 
 
@@ -27,9 +33,19 @@ class InvocationReport:
 
 class ServerlessPlatform:
     def __init__(self, *, seed: int = 0, keepalive_s: float = 480.0,
-                 use_fallback_calibration: bool = False):
+                 use_fallback_calibration: bool = False,
+                 placement="mru", keepalive=None, scaling=None,
+                 concurrency: int = 1,
+                 batching: Union[BatchingConfig, dict, None] = None,
+                 max_containers: int = 0):
         self.seed = seed
         self.keepalive_s = keepalive_s
+        self.placement = placement
+        self.keepalive = keepalive
+        self.scaling = scaling
+        self.concurrency = concurrency
+        self.batching = batching
+        self.max_containers = max_containers
         self.functions: dict[str, FunctionSpec] = {}
         self._cal = None if use_fallback_calibration else calibration.calibrate()
         self._fallback = use_fallback_calibration
@@ -46,10 +62,38 @@ class ServerlessPlatform:
         return spec
 
     # ------------------------------------------------------------------
+    def _cluster(self, specs, keepalive_s: Optional[float] = None,
+                 **overrides) -> ClusterSimulator:
+        # an explicit per-call TTL wins over the configured policy (the
+        # pre-refactor invoke() contract); otherwise stateful policies
+        # (AdaptiveTTL histograms) are copied so runs stay independent
+        keepalive = (FixedTTL(keepalive_s) if keepalive_s is not None
+                     else copy.deepcopy(self.keepalive))
+        kw = dict(placement=self.placement, keepalive=keepalive,
+                  scaling=copy.deepcopy(self.scaling),
+                  concurrency=self.concurrency,
+                  batching=self.batching, max_containers=self.max_containers,
+                  keepalive_s=self.keepalive_s,
+                  seed=self.seed)
+        kw.update(overrides)
+        return ClusterSimulator(specs, **kw)
+
     def invoke(self, spec: FunctionSpec, workload: list,
-               keepalive_s: Optional[float] = None):
-        sim = Simulator(spec, seed=self.seed,
-                        keepalive_s=keepalive_s or self.keepalive_s)
+               keepalive_s: Optional[float] = None, **overrides):
+        """Run one function's workload under the platform's policy stack.
+
+        ``keepalive_s`` forces a fixed TTL for this call; stateful policies
+        are copied per call, so repeated invocations are reproducible."""
+        sim = self._cluster(spec, keepalive_s, **overrides)
+        records = sim.run(list(workload))
+        kept = [r for r in records if r.tag != "prime"]
+        return kept, sim
+
+    def invoke_fleet(self, workload: list,
+                     keepalive_s: Optional[float] = None, **overrides):
+        """Serve every deployed function from one shared cluster; requests
+        route by ``Request.fn`` (a FunctionSpec ``name``)."""
+        sim = self._cluster(dict(self.functions), keepalive_s, **overrides)
         records = sim.run(list(workload))
         kept = [r for r in records if r.tag != "prime"]
         return kept, sim

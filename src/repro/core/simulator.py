@@ -1,157 +1,37 @@
-"""Deterministic discrete-event serverless platform simulator.
+"""Deterministic discrete-event serverless platform simulator (compat shim).
 
-Implements the event system described in the paper's §2.1 (OpenWhisk-style):
-take an event, dispatch to a function, launch or reuse a container, execute,
-return the response.  Service times come from the calibrated resource model
-(`repro.core.resources`) — real measured JAX forward-pass times scaled by the
-tier's CPU share — plus small seeded jitter, so experiments are reproducible
-bit-for-bit.
+The event loop now lives in ``repro.core.cluster`` as a policy-driven
+``ClusterSimulator`` (placement / keep-alive / scaling policies, optional
+per-container concurrency, batching-aware fleets, multi-function routing).
+``Simulator`` remains the single-function Lambda-2017 view of it:
 
-Scheduling policy (Lambda semantics):
+Scheduling policy (Lambda semantics, the cluster's default stack):
   * one in-flight request per container,
-  * a request goes to any idle warm container, else a cold start is issued,
-  * unlimited scale-out (the autoscaler tracks but does not cap by default),
+  * a request goes to the most-recently-used idle warm container, else a
+    cold start is issued,
+  * unlimited scale-out unless ``max_containers`` caps it,
   * idle containers are evicted after ``keepalive_s``.
+
+The records produced under this default stack are bit-identical to the
+pre-refactor monolithic loop (tests/test_cluster.py pins this).
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import itertools
-from typing import Optional
-
-import numpy as np
-
-from repro.core import billing, resources
-from repro.core.container import Container, State
+from repro.core.cluster.cluster import ClusterSimulator
+from repro.core.cluster.events import RequestRecord  # noqa: F401  (re-export)
 from repro.core.function import FunctionSpec
-from repro.core.workload import Request
+from repro.core.workload import Request  # noqa: F401  (compat re-export)
 
 DEFAULT_KEEPALIVE_S = 480.0   # idle TTL; the paper's 10-min gaps force colds
 
 
-@dataclasses.dataclass
-class RequestRecord:
-    rid: int
-    arrival_s: float
-    start_exec_s: float
-    end_s: float
-    cold: bool
-    prediction_s: float
-    exec_s: float
-    cost: float
-    container_id: int
-    memory_mb: int
-    tag: str = ""
+class Simulator(ClusterSimulator):
+    """Single-function cluster with the default (Lambda) policy stack."""
 
-    @property
-    def response_s(self) -> float:
-        return self.end_s - self.arrival_s
-
-
-class Simulator:
-    def __init__(self, spec: FunctionSpec, *, keepalive_s: float = DEFAULT_KEEPALIVE_S,
-                 seed: int = 0, jitter: float = 0.03, max_containers: int = 0):
+    def __init__(self, spec: FunctionSpec, *,
+                 keepalive_s: float = DEFAULT_KEEPALIVE_S, seed: int = 0,
+                 jitter: float = 0.03, max_containers: int = 0):
+        super().__init__(spec, keepalive_s=keepalive_s, seed=seed,
+                         jitter=jitter, max_containers=max_containers)
         self.spec = spec
         self.keepalive_s = keepalive_s
-        self.rng = np.random.default_rng(seed)
-        self.jitter = jitter
-        self.max_containers = max_containers  # 0 = unlimited (Lambda)
-        self.records: list[RequestRecord] = []
-        self.containers: dict[int, Container] = {}
-        self.cold_starts = 0
-        self.evictions = 0
-        self._seq = itertools.count()
-
-    # ------------------------------------------------------------------
-    def _jit(self, x: float) -> float:
-        if self.jitter <= 0:
-            return x
-        return float(x * self.rng.lognormal(0.0, self.jitter))
-
-    def _service_time(self) -> float:
-        """Warm-path execution: prediction under the tier's CPU share."""
-        h = self.spec.handler
-        return self._jit(resources.exec_time(h.base_cpu_seconds,
-                                             self.spec.memory_mb))
-
-    # ------------------------------------------------------------------
-    def run(self, requests: list[Request]) -> list[RequestRecord]:
-        """Event loop: request arrivals + container expiries."""
-        events: list = []  # (time, seq, kind, payload)
-        for r in requests:
-            heapq.heappush(events, (r.arrival_s, next(self._seq), "arrival", r))
-
-        idle: list[tuple[float, int]] = []   # (last_used time, cid)
-        busy_until: dict[int, float] = {}
-
-        while events:
-            t, _, kind, payload = heapq.heappop(events)
-            if kind == "complete":
-                cid = payload
-                c = self.containers[cid]
-                c.state = State.WARM
-                idle.append((t, cid))
-                busy_until.pop(cid, None)
-                continue
-            if kind == "expire":
-                cid = payload
-                c = self.containers.get(cid)
-                if c and c.state == State.WARM and t - c.last_used_at >= \
-                        self.keepalive_s - 1e-9:
-                    c.state = State.EVICTED
-                    self.evictions += 1
-                continue
-
-            req: Request = payload
-            idle = [(ts, cid) for ts, cid in idle
-                    if self.containers[cid].state == State.WARM]
-
-            chosen: Optional[Container] = None
-            cold = False
-            if idle:
-                idle.sort()
-                _, cid = idle.pop()          # most-recently-used reuse
-                chosen = self.containers[cid]
-            else:
-                if self.max_containers and len(
-                        [c for c in self.containers.values()
-                         if c.state != State.EVICTED]) >= self.max_containers:
-                    # throttled: queue behind the earliest-free container
-                    cid, until = min(busy_until.items(), key=lambda kv: kv[1])
-                    heapq.heappush(events, (until, next(self._seq),
-                                            "arrival", req))
-                    continue
-                cold = True
-                chosen = Container(self.spec, created_at=t)
-                self.containers[chosen.cid] = chosen
-                self.cold_starts += 1
-
-            # timing
-            start = t
-            exec_s = self._service_time()
-            prediction_s = exec_s
-            if cold:
-                bd = chosen.cold_breakdown()
-                setup = self._jit(bd.total_s)
-                start = t + setup
-            end = start + exec_s + resources.NETWORK_OVERHEAD_S
-            chosen.state = State.BUSY
-            chosen.last_used_at = end
-            chosen.invocations += 1
-            busy_until[chosen.cid] = end
-            heapq.heappush(events, (end, next(self._seq), "complete",
-                                    chosen.cid))
-            heapq.heappush(events, (end + self.keepalive_s, next(self._seq),
-                                    "expire", chosen.cid))
-
-            # Lambda bills init+exec on colds (2017 semantics billed the
-            # function duration; init was free — we bill exec only, like the
-            # paper's cost figures which key off execution time)
-            cost = billing.invocation_cost(exec_s, self.spec.memory_mb)
-            self.records.append(RequestRecord(
-                rid=req.rid, arrival_s=req.arrival_s, start_exec_s=start,
-                end_s=end, cold=cold, prediction_s=prediction_s,
-                exec_s=exec_s, cost=cost, container_id=chosen.cid,
-                memory_mb=self.spec.memory_mb, tag=req.tag))
-        return self.records

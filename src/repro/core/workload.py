@@ -7,6 +7,12 @@ given the seed, matching the paper's measurement scripts:
   * warm_burst:  1 discarded priming request, then 25 requests at 1 s spacing.
   * step_ramp:   10 parallel requests, +10 req/s each second for 10 s (Fig 7).
   * poisson:     open-loop Poisson arrivals (beyond-paper, for SLA studies).
+  * multi_function_trace: merged per-function Poisson streams — the mixed
+    fleet workload for the multi-function ClusterSimulator.
+
+``Request.fn`` names the target function for multi-function clusters; the
+empty default routes to the cluster's default fleet, so single-function
+workloads are unchanged.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ class Request:
     rid: int
     arrival_s: float
     tag: str = ""
+    fn: str = ""          # target function ("" -> the cluster default)
 
 
 def cold_probe(n: int = 5, gap_s: float = 600.0) -> list:
@@ -66,3 +73,29 @@ def poisson(rate_rps: float, duration_s: float, seed: int = 0) -> list:
         reqs.append(Request(rid, float(t), "poisson"))
         rid += 1
     return reqs
+
+
+def multi_function_trace(rates_rps: dict, duration_s: float,
+                         seed: int = 0) -> list:
+    """Mixed fleet trace: one independent Poisson stream per function.
+
+    ``rates_rps`` maps function name -> arrival rate.  Streams are merged
+    and re-numbered in arrival order; each request carries ``fn`` so the
+    cluster router can fan them out over a shared container pool.
+    """
+    merged = []
+    for i, (fn, rate) in enumerate(sorted(rates_rps.items())):
+        if rate < 0:
+            raise ValueError(f"negative rate for {fn!r}: {rate}")
+        if rate == 0:
+            continue          # disabled function in a sweep
+        rng = np.random.default_rng(np.random.SeedSequence([seed, i]))
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t >= duration_s:
+                break
+            merged.append((float(t), fn))
+    merged.sort()
+    return [Request(rid, t, tag=fn, fn=fn)
+            for rid, (t, fn) in enumerate(merged)]

@@ -1,0 +1,28 @@
+"""Version-compat shims for JAX Pallas/TPU APIs.
+
+The TPU compiler-params dataclass was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (<= 0.4.x) became ``pltpu.CompilerParams``
+(newer releases).  Kernels import ``CompilerParams`` from here so they run
+on whichever JAX the container bakes in.
+
+``shard_map`` similarly moved from ``jax.experimental.shard_map`` to a
+top-level ``jax.shard_map`` (with ``check_rep`` renamed ``check_vma``);
+``shard_map_compat`` papers over both.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map on new JAX; jax.experimental.shard_map on 0.4.x."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)

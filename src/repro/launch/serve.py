@@ -49,7 +49,7 @@ def main():
             arrival_s=time.perf_counter() - t0, n_new=args.n_new))
     lat = {}
     while batcher.queue:
-        batch = batcher.form_batch(time.perf_counter() - t0)
+        batch = batcher.form_batch(time.perf_counter() - t0, force=True)
         res = eng.generate(jnp.asarray(batch.tokens), batch.n_new,
                            temperature=args.temperature)
         done = time.perf_counter() - t0

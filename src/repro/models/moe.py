@@ -25,6 +25,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.pallas_compat import shard_map_compat
+
 from .common import ModelConfig, activation, dense_init
 
 DEFAULT_GROUP = 4096
@@ -155,7 +157,7 @@ def _moe_shard_map(p, x, cfg: ModelConfig, mesh, group_size: int):
                                  cfg, group_size, e0=e0)
         return jax.lax.psum(y.reshape(bl, s, d), "model")
 
-    y = jax.shard_map(
+    y = shard_map_compat(
         body, mesh=mesh,
         in_specs=(xspec, P(None, None), wspec["wi"], wspec["wu"], wspec["wd"]),
         out_specs=xspec, check_vma=False)(

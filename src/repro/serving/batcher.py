@@ -48,15 +48,23 @@ class Batcher:
             return False
         if len(self.queue) >= self.max_batch:
             return True
-        return (now_s - self.queue[0].arrival_s) >= self.max_wait_s
+        # 1e-9 tolerance: a caller waking exactly at arrival + max_wait may
+        # see (now - arrival) < max_wait by one float ulp and never retry
+        return (now_s - self.queue[0].arrival_s) >= self.max_wait_s - 1e-9
 
     def next_flush_at(self) -> Optional[float]:
         if not self.queue:
             return None
         return self.queue[0].arrival_s + self.max_wait_s
 
-    def form_batch(self, now_s: float) -> Optional[Batch]:
-        if not self.queue:
+    def form_batch(self, now_s: float, *, force: bool = False) -> Optional[Batch]:
+        """Flush up to ``max_batch`` queued requests.
+
+        Honors readiness semantics: returns None until ``max_batch`` requests
+        accumulate or ``max_wait_s`` elapses since the oldest queued request.
+        ``force=True`` drains regardless (shutdown / end-of-trace flush).
+        """
+        if not (self.ready(now_s) or (force and self.queue)):
             return None
         take = self.queue[: self.max_batch]
         self.queue = self.queue[self.max_batch:]

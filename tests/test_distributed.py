@@ -9,6 +9,8 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow  # subprocess shard_map equivalence runs
+
 
 def _run(code: str, timeout: int = 600):
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))

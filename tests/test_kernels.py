@@ -11,6 +11,8 @@ from repro.kernels.decode.ref import flash_decode_ref
 from repro.kernels.rwkv.ops import wkv6
 from repro.kernels.rwkv.ref import wkv6_ref
 
+pytestmark = pytest.mark.slow  # interpret-mode Pallas sweeps dominate runtime
+
 RNG = jax.random.PRNGKey(0)
 
 

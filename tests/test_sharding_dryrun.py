@@ -14,6 +14,8 @@ from repro.launch import sharding
 from repro.launch.mesh import make_local_mesh
 from repro.models import api
 
+pytestmark = pytest.mark.slow  # subprocess dry-runs with forced device counts
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
