@@ -23,6 +23,7 @@ from typing import Optional, Union
 import numpy as np
 
 from repro.core import billing, resources
+from repro.core.autoscaler import ARRIVAL_HISTORY_S
 from repro.core.cluster import events as ev
 from repro.core.cluster.events import EventQueue, RequestRecord
 from repro.core.cluster.policies import (FixedTTL, KeepalivePolicy,
@@ -38,7 +39,7 @@ from repro.serving.batcher import PendingRequest
 
 REQUEUE = "requeue"         # throttled arrival re-entering the loop
 BATCH_RETRY = "batch_retry"  # throttled formed batch retrying as a unit
-_ARRIVAL_HISTORY_S = 600.0   # how much arrival history fleets retain
+_ARRIVAL_HISTORY_S = ARRIVAL_HISTORY_S  # arrival history fleets retain
 
 
 class ClusterSimulator:

@@ -8,6 +8,11 @@ The platform now fronts the policy-driven ``repro.core.cluster`` subsystem:
 construct it with ``placement= / keepalive= / scaling= / concurrency= /
 batching=`` to move off the Lambda-2017 defaults, and use ``invoke_fleet``
 to serve every deployed function from one shared cluster.
+
+For ready-made workload regimes (sparse / bursty / diurnal / flash-crowd /
+multi-function) use ``repro.core.scenarios``: each named scenario deploys
+its fleet through this facade, and ``benchmarks/scenario_suite.py`` sweeps
+the policy space over it.
 """
 from __future__ import annotations
 
@@ -32,6 +37,36 @@ class InvocationReport:
 
 
 class ServerlessPlatform:
+    """Deploy functions and run workloads under one policy stack.
+
+    Policy parameters (all forwarded to ``ClusterSimulator``):
+
+    * ``placement`` — ``"mru"`` (default; best locality, wins sparse
+      trickles) | ``"lru"`` (keeps the whole pool warm for bursts) |
+      ``"least_loaded"`` (for ``concurrency > 1``), or a policy instance.
+    * ``keepalive`` — ``None``/``"fixed"`` (Lambda's fixed idle TTL,
+      ``keepalive_s`` seconds, default 480) | ``"adaptive"`` (per-function
+      gap histogram; the ``sparse`` scenario's expected winner), or an
+      instance.  Stateful instances are deep-copied per invocation so
+      repeated experiments stay independent.
+    * ``scaling`` — ``None``/``"lambda"`` (scale-out on demand only) |
+      ``"predictive"`` (Knative-style warm-pool sizing; tune via
+      ``PredictiveWarmPool(Autoscaler(window_s, margin, min_pool))`` — the
+      ``diurnal`` / ``flash_crowd`` scenarios' expected winner), or an
+      instance.
+    * ``concurrency`` — in-flight requests per container (default 1);
+      above 1, requests slow each other by the cluster's contention
+      factor.
+    * ``batching`` — a ``BatchingConfig`` (or ``{fn: config}``) queueing
+      arrivals into shared passes; the ``bursty`` scenario's expected
+      winner and half of ``multi_function``'s.
+    * ``max_containers`` — shared cluster-wide container cap (0 =
+      unlimited); the contention knob in ``multi_function``.
+
+    See ``repro.core.scenarios`` for the named regimes these expectations
+    are graded in.
+    """
+
     def __init__(self, *, seed: int = 0, keepalive_s: float = 480.0,
                  use_fallback_calibration: bool = False,
                  placement="mru", keepalive=None, scaling=None,

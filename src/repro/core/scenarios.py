@@ -1,0 +1,240 @@
+"""Named evaluation scenarios: trace + fleet + SLA + expected winner.
+
+The scenario harness turns the repo from "one experiment" into a library of
+workload regimes, each paired with the policy stack that is expected to win
+there (ROADMAP's bursty/diurnal/multi-function open item; cf. the bursty
+production loads of Wu et al., arXiv:2103.02958, and the pre-warming lever
+surveyed by Kojs, arXiv:2311.13587).
+
+A ``Scenario`` bundles everything ``benchmarks/scenario_suite.py`` needs:
+
+  * ``functions`` — the fleet: (paper model, memory tier) pairs deployed on
+    a ``ServerlessPlatform``; the first entry is the default-route fleet.
+  * ``trace`` — a factory ``(fn_names, seed, scale) -> list[Request]``
+    built from ``repro.core.workload`` generators.  ``scale`` multiplies
+    trace duration so CI can run tiny smoke variants of the same scenario
+    (``tiny_scale`` is the suite's ``--tiny`` choice).
+  * ``sla`` — the ``repro.core.sla.SLA`` bound the report grades against.
+  * ``expected_winner`` — a ``POLICY_STACKS`` name; the suite's verdict
+    compares this stack against ``baseline`` on cold rate and p95.
+  * ``max_containers`` — shared cluster cap (0 = unlimited), the
+    multi-function contention knob.
+  * optional ``adaptive``/``predictive`` factories returning tuned policy
+    instances for this scenario's regime (fresh per run, so histogram and
+    autoscaler state never leak between sweep combos).
+
+Use ``get(name)`` / ``names()`` to consume the registry, ``register`` to
+extend it (e.g. a replayed production trace via ``workload.trace_replay``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+from repro.core import workload as wl
+from repro.core.autoscaler import Autoscaler
+from repro.core.cluster import BatchingConfig
+from repro.core.cluster.policies import PredictiveWarmPool
+from repro.core.sla import INTERACTIVE, SLA
+
+# Named policy stacks: the single-axis stacks differ from ``baseline`` on
+# exactly one axis, so a scenario verdict attributes the win to that axis;
+# ``batching_predictive`` combines the two levers that attack different
+# bottlenecks (queueing vs cold pools) for the shared-cap scenario.  Values
+# are ClusterSimulator kwargs; the suite materializes per-scenario tuned
+# instances via Scenario.adaptive / Scenario.predictive.  Every stack is a
+# point in the suite's sweep cross-product, so verdicts read straight out
+# of the sweep table.
+POLICY_STACKS: dict = {
+    "baseline": dict(placement="mru", keepalive="fixed", scaling="lambda",
+                     concurrency=1, batching=None),
+    "adaptive": dict(placement="mru", keepalive="adaptive", scaling="lambda",
+                     concurrency=1, batching=None),
+    "predictive": dict(placement="mru", keepalive="fixed",
+                       scaling="predictive", concurrency=1, batching=None),
+    "batching": dict(placement="mru", keepalive="fixed", scaling="lambda",
+                     concurrency=1,
+                     batching=BatchingConfig(max_batch=4, max_wait_s=0.5)),
+    "batching_predictive": dict(placement="mru", keepalive="fixed",
+                                scaling="predictive", concurrency=1,
+                                batching=BatchingConfig(max_batch=4,
+                                                        max_wait_s=0.5)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetFunction:
+    """One deployed function in a scenario's fleet."""
+    model: str            # repro.core.calibration.PAPER_MODELS key
+    memory_mb: int = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    functions: Tuple[FleetFunction, ...]
+    trace: Callable       # (fn_names, seed, scale) -> list[Request]
+    sla: SLA
+    expected_winner: str
+    max_containers: int = 0
+    seed: int = 0
+    tiny_scale: float = 0.02
+    adaptive: Optional[Callable] = None     # () -> AdaptiveTTL
+    predictive: Optional[Callable] = None   # () -> PredictiveWarmPool
+
+    def deploy(self, platform) -> list:
+        """Deploy the fleet on ``platform``; returns specs in fleet order."""
+        return [platform.deploy_paper_model(f.model, f.memory_mb)
+                for f in self.functions]
+
+    def build_trace(self, fn_names: list, scale: float = 1.0) -> list:
+        if len(fn_names) != len(self.functions):
+            raise ValueError(f"{self.name}: expected "
+                             f"{len(self.functions)} fleet names, got "
+                             f"{len(fn_names)}")
+        if self.expected_winner not in POLICY_STACKS:
+            raise KeyError(f"{self.name}: unknown expected winner "
+                           f"{self.expected_winner!r}")
+        return self.trace(list(fn_names), self.seed, scale)
+
+
+SCENARIOS: dict = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"duplicate scenario {scenario.name!r}")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {names()}") from None
+
+
+def names() -> list:
+    return sorted(SCENARIOS)
+
+
+# --------------------------------------------------------------- the library
+# sparse: the original policy_sweep regime.  P(gap > 480 s TTL) ~ 15% at
+# 0.004 rps, so the fixed TTL leaks cold starts; the adaptive histogram
+# learns the true gap distribution.  benchmarks/policy_sweep.py is a thin
+# preset of exactly this scenario (trace params pinned for bit-compat).
+SPARSE_RATE_RPS = 0.004
+SPARSE_DURATION_S = 250_000.0
+
+register(Scenario(
+    name="sparse",
+    description="Sparse Poisson trickle (the paper's cold-start regime): "
+                "mean gap 250 s vs the 480 s Lambda TTL.",
+    functions=(FleetFunction("resnet18", 1024),),
+    trace=lambda fns, seed, scale: wl.poisson(
+        SPARSE_RATE_RPS, SPARSE_DURATION_S * scale, seed=seed),
+    sla=INTERACTIVE,
+    expected_winner="adaptive",
+    seed=5,
+    tiny_scale=0.02,
+))
+
+# bursty: short 2 rps bursts separated by ~20-minute idle dwells, so the
+# fixed TTL evicts the pool between bursts and every burst head pays a
+# thundering herd of colds.  Batching absorbs the herd into shared passes
+# (fewer containers, amortized cost); the predictive axis also wins here
+# via its provisioned-concurrency floor (min_pool) — both visible in the
+# sweep table.
+register(Scenario(
+    name="bursty",
+    description="On/off MMPP: 2 rps bursts (~30 s) separated by ~20 min "
+                "idle dwells that defeat the fixed TTL.",
+    functions=(FleetFunction("resnet18", 1024),),
+    trace=lambda fns, seed, scale: wl.mmpp_bursty(
+        rate_on_rps=2.0, rate_off_rps=0.01, mean_on_s=30.0,
+        mean_off_s=1200.0, duration_s=40_000.0 * scale, seed=seed),
+    sla=INTERACTIVE,
+    expected_winner="batching",
+    seed=7,
+    tiny_scale=0.05,
+    predictive=lambda: PredictiveWarmPool(Autoscaler(min_pool=3)),
+))
+
+# diurnal: a deep day/night cycle on the heaviest model at its smallest
+# legal tier (resnext50@448: ~7.5 s cold starts).  The near-zero trough
+# outlasts the fixed TTL, so the baseline regrows its pool every "morning";
+# the predictive pool's rate window plus a small floor keeps the ramp warm.
+register(Scenario(
+    name="diurnal",
+    description="Sinusoid day/night Poisson (2 h period, 8 cycles, deep "
+                "trough): the pool dies overnight and regrows at dawn; "
+                "prediction beats reaction.",
+    functions=(FleetFunction("resnext50", 448),),
+    trace=lambda fns, seed, scale: wl.diurnal(
+        base_rps=0.008, amplitude=0.98, period_s=7200.0,
+        duration_s=57_600.0 * scale, seed=seed),
+    sla=INTERACTIVE,
+    expected_winner="predictive",
+    seed=11,
+    tiny_scale=0.05,
+    predictive=lambda: PredictiveWarmPool(
+        Autoscaler(window_s=600.0, margin=2.0, min_pool=3)),
+))
+
+# flash_crowd: one sudden 4 rps spike on the heavy model.  The first cold
+# start takes ~9.7 s and every spike arrival inside that window cold-starts
+# its own container (thundering herd); a provisioned floor sized for the
+# anticipated event (min_pool=6 ~ spike_rps * service_time) absorbs the
+# onset.  Note the adaptive histogram LOSES here — it learns the dense
+# trickle gaps, shrinks the TTL, and makes the trickle itself cold.
+register(Scenario(
+    name="flash_crowd",
+    description="Steady trickle with one 4 rps flash crowd (60 s) on the "
+                "heavy model: the onset herd cold-starts a container per "
+                "request until the first cold start completes.",
+    functions=(FleetFunction("resnext50", 448),),
+    trace=lambda fns, seed, scale: wl.flash_crowd(
+        base_rps=0.05, spike_rps=4.0, spike_at_s=1200.0 * scale,
+        spike_len_s=60.0, duration_s=3600.0 * scale + 60.0, seed=seed),
+    sla=INTERACTIVE,
+    expected_winner="predictive",
+    seed=13,
+    tiny_scale=0.2,
+    predictive=lambda: PredictiveWarmPool(
+        Autoscaler(window_s=60.0, margin=2.0, min_pool=6)),
+))
+
+# multi_function: three models with heterogeneous streams contending for a
+# 3-container cap.  The bursty fleet's scale-outs evict the other fleets'
+# warm containers and throttle its own bursts (requeue delays dominate
+# p95); batching packs each burst into one container while the predictive
+# floor keeps one warm container per fleet — the combined stack wins cold
+# rate, p95, and cost at once.
+register(Scenario(
+    name="multi_function",
+    description="Three-model fleet (diurnal + bursty + sparse streams) "
+                "sharing a 3-container cap: policies compete for capacity.",
+    functions=(FleetFunction("squeezenet", 1024),
+               FleetFunction("resnet18", 1024),
+               FleetFunction("resnext50", 1536)),
+    trace=lambda fns, seed, scale: wl.multi_function_trace(
+        {fns[0]: lambda s: wl.diurnal(base_rps=0.05, amplitude=0.9,
+                                      period_s=3600.0,
+                                      duration_s=28_800.0 * scale, seed=s),
+         fns[1]: lambda s: wl.mmpp_bursty(rate_on_rps=2.0,
+                                          rate_off_rps=0.01,
+                                          mean_on_s=30.0, mean_off_s=1200.0,
+                                          duration_s=28_800.0 * scale,
+                                          seed=s),
+         fns[2]: 0.003},
+        28_800.0 * scale, seed=seed),
+    sla=INTERACTIVE,
+    expected_winner="batching_predictive",
+    max_containers=3,
+    seed=17,
+    tiny_scale=0.05,
+    predictive=lambda: PredictiveWarmPool(Autoscaler(min_pool=1)),
+))

@@ -1,14 +1,28 @@
-"""JMeter-style workload generators (paper §3.1 / §3.4, Fig 7).
+"""JMeter-style workload generators (paper §3.1 / §3.4, Fig 7) plus the
+scenario-harness trace library (bursty / diurnal / flash-crowd / replay).
 
-Each generator yields (arrival_time_s, request_id) pairs — deterministic
-given the seed, matching the paper's measurement scripts:
+Each generator returns a list of ``Request`` — deterministic given the seed,
+matching the paper's measurement scripts:
 
   * cold_probe:  5 sequential requests separated by 10 minutes (forces cold).
   * warm_burst:  1 discarded priming request, then 25 requests at 1 s spacing.
   * step_ramp:   10 parallel requests, +10 req/s each second for 10 s (Fig 7).
   * poisson:     open-loop Poisson arrivals (beyond-paper, for SLA studies).
-  * multi_function_trace: merged per-function Poisson streams — the mixed
-    fleet workload for the multi-function ClusterSimulator.
+
+Scenario-harness traces (see ``repro.core.scenarios`` for the named
+scenarios built from them):
+
+  * mmpp_bursty:  two-state Markov-modulated Poisson process — exponential
+    ON/OFF dwells with a high rate inside bursts and a trickle between them.
+  * diurnal:      sinusoid-modulated inhomogeneous Poisson (day/night cycle),
+    sampled exactly by Lewis-Shedler thinning.
+  * flash_crowd:  steady trickle with one rectangular spike window.
+  * trace_replay / save_trace: JSON round-trip of any trace, so measured
+    production traces plug into the same harness.
+  * multi_function_trace: merged per-function streams — the mixed-fleet
+    workload for the multi-function ClusterSimulator.  Per-function entries
+    may be plain Poisson rates (the original behaviour) or any generator
+    above, so every scenario has a mixed-fleet variant.
 
 ``Request.fn`` names the target function for multi-function clusters; the
 empty default routes to the cluster's default fleet, so single-function
@@ -17,6 +31,8 @@ workloads are unchanged.
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
 from typing import Iterator, Tuple
 
 import numpy as np
@@ -75,16 +91,161 @@ def poisson(rate_rps: float, duration_s: float, seed: int = 0) -> list:
     return reqs
 
 
+def mmpp_bursty(*, rate_on_rps: float = 2.0, rate_off_rps: float = 0.02,
+                mean_on_s: float = 60.0, mean_off_s: float = 240.0,
+                duration_s: float = 3600.0, seed: int = 0,
+                start_on: bool = False) -> list:
+    """Two-state MMPP: ON/OFF bursts with exponential dwell times.
+
+    The process alternates between an OFF state (rate ``rate_off_rps``, mean
+    dwell ``mean_off_s``) and an ON state (rate ``rate_on_rps``, mean dwell
+    ``mean_on_s``); within each dwell, arrivals are Poisson at the state's
+    rate.  Long-run mean rate is the dwell-weighted average of the two
+    rates.  Requests are tagged ``"burst"`` inside ON dwells and ``"idle"``
+    between them, so reports can split the regimes.
+    """
+    if min(rate_on_rps, rate_off_rps) < 0:
+        raise ValueError("rates must be non-negative")
+    rng = np.random.default_rng(seed)
+    arrivals: list = []
+    t, on = 0.0, start_on
+    while t < duration_s:
+        dwell = rng.exponential(mean_on_s if on else mean_off_s)
+        end = min(t + dwell, duration_s)
+        rate = rate_on_rps if on else rate_off_rps
+        if rate > 0:
+            tt = t
+            while True:
+                tt += rng.exponential(1.0 / rate)
+                if tt >= end:
+                    break
+                arrivals.append((float(tt), "burst" if on else "idle"))
+        t, on = end, not on
+    return [Request(rid, t, tag) for rid, (t, tag) in enumerate(arrivals)]
+
+
+def diurnal(*, base_rps: float = 0.5, amplitude: float = 0.8,
+            period_s: float = 3600.0, duration_s: float = 7200.0,
+            phase: float = -math.pi / 2, seed: int = 0) -> list:
+    """Sinusoid-modulated Poisson (day/night cycle), sampled by thinning.
+
+    Instantaneous rate ``base_rps * (1 + amplitude*sin(2*pi*t/period_s +
+    phase))``; the default phase starts the trace at the trough ("dawn"), so
+    predictive scaling sees a full rising edge.  Time-averaged rate over
+    whole periods is ``base_rps``.  Exact Lewis-Shedler thinning: candidates
+    from a homogeneous process at the peak rate, accepted with probability
+    rate(t)/peak.
+    """
+    if not 0.0 <= amplitude <= 1.0:
+        raise ValueError(f"amplitude must be in [0, 1], got {amplitude}")
+    rate_max = base_rps * (1.0 + amplitude)
+    if rate_max <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    t, arrivals = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rate_max)
+        if t >= duration_s:
+            break
+        rate = base_rps * (1.0 + amplitude
+                           * math.sin(2.0 * math.pi * t / period_s + phase))
+        if rng.uniform() * rate_max < rate:
+            arrivals.append(float(t))
+    return [Request(rid, t, "diurnal") for rid, t in enumerate(arrivals)]
+
+
+def flash_crowd(*, base_rps: float = 0.05, spike_rps: float = 5.0,
+                spike_at_s: float = 600.0, spike_len_s: float = 60.0,
+                duration_s: float = 1800.0, seed: int = 0) -> list:
+    """Steady trickle with one rectangular flash-crowd window.
+
+    Rate is ``base_rps`` everywhere except ``[spike_at_s, spike_at_s +
+    spike_len_s)`` where it jumps to ``spike_rps`` (piecewise-constant
+    thinning).  Spike requests are tagged ``"spike"``, the rest ``"base"``.
+    """
+    rate_max = max(base_rps, spike_rps)
+    if rate_max <= 0:
+        return []
+    rng = np.random.default_rng(seed)
+    t, arrivals = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rate_max)
+        if t >= duration_s:
+            break
+        in_spike = spike_at_s <= t < spike_at_s + spike_len_s
+        rate = spike_rps if in_spike else base_rps
+        if rng.uniform() * rate_max < rate:
+            arrivals.append((float(t), "spike" if in_spike else "base"))
+    return [Request(rid, t, tag) for rid, (t, tag) in enumerate(arrivals)]
+
+
+TRACE_SCHEMA_VERSION = 1
+
+
+def trace_to_dict(requests: list) -> dict:
+    """Serializable form of a trace (see ``trace_replay`` for the inverse)."""
+    return {"version": TRACE_SCHEMA_VERSION,
+            "requests": [{"rid": r.rid, "arrival_s": r.arrival_s,
+                          "tag": r.tag, "fn": r.fn} for r in requests]}
+
+
+def save_trace(requests: list, path: str) -> None:
+    """Write a trace as JSON; ``trace_replay(path)`` round-trips it exactly
+    (JSON preserves IEEE-754 doubles)."""
+    with open(path, "w") as f:
+        json.dump(trace_to_dict(requests), f, indent=1)
+
+
+def trace_replay(source) -> list:
+    """Load a trace from ``save_trace`` output: a path, a file-like object,
+    or an already-parsed dict.  Requests come back sorted by arrival time
+    with their recorded rid/tag/fn intact."""
+    if isinstance(source, str):
+        with open(source) as f:
+            payload = json.load(f)
+    elif hasattr(source, "read"):
+        payload = json.load(source)
+    else:
+        payload = source
+    version = payload.get("version")
+    if version != TRACE_SCHEMA_VERSION:
+        raise ValueError(f"unsupported trace version {version!r} "
+                         f"(expected {TRACE_SCHEMA_VERSION})")
+    reqs = [Request(rid=int(r["rid"]), arrival_s=float(r["arrival_s"]),
+                    tag=r.get("tag", ""), fn=r.get("fn", ""))
+            for r in payload["requests"]]
+    reqs.sort(key=lambda r: (r.arrival_s, r.rid))
+    return reqs
+
+
 def multi_function_trace(rates_rps: dict, duration_s: float,
                          seed: int = 0) -> list:
-    """Mixed fleet trace: one independent Poisson stream per function.
+    """Mixed fleet trace: one independent arrival stream per function.
 
-    ``rates_rps`` maps function name -> arrival rate.  Streams are merged
-    and re-numbered in arrival order; each request carries ``fn`` so the
-    cluster router can fan them out over a shared container pool.
+    ``rates_rps`` maps function name -> one of:
+
+      * a number: Poisson arrivals at that rate (the original behaviour,
+        bit-compatible with earlier releases);
+      * a callable ``f(seed) -> list[Request]``: any generator above,
+        invoked with a per-function child seed (e.g.
+        ``lambda s: mmpp_bursty(duration_s=600, seed=s)``);
+      * a pre-built list of ``Request`` (e.g. from ``trace_replay``).
+
+    Streams are merged and re-numbered in arrival order; each request
+    carries ``fn`` so the cluster router can fan them out over a shared
+    container pool.  Requests from callables/lists keep their own tag when
+    set (``"burst"``, ``"spike"``, ...), else the function name.
     """
     merged = []
-    for i, (fn, rate) in enumerate(sorted(rates_rps.items())):
+    for i, (fn, spec) in enumerate(sorted(rates_rps.items())):
+        if callable(spec) or isinstance(spec, (list, tuple)):
+            child = int(np.random.SeedSequence([seed, i]).generate_state(1)[0])
+            reqs = spec(child) if callable(spec) else spec
+            for r in reqs:
+                if r.arrival_s < duration_s:
+                    merged.append((r.arrival_s, fn, r.tag or fn))
+            continue
+        rate = spec
         if rate < 0:
             raise ValueError(f"negative rate for {fn!r}: {rate}")
         if rate == 0:
@@ -95,7 +256,7 @@ def multi_function_trace(rates_rps: dict, duration_s: float,
             t += rng.exponential(1.0 / rate)
             if t >= duration_s:
                 break
-            merged.append((float(t), fn))
+            merged.append((float(t), fn, fn))
     merged.sort()
-    return [Request(rid, t, tag=fn, fn=fn)
-            for rid, (t, fn) in enumerate(merged)]
+    return [Request(rid, t, tag=tag, fn=fn)
+            for rid, (t, fn, tag) in enumerate(merged)]

@@ -5,7 +5,7 @@ positions decode together using the vector-position decode path
 (``attention_decode`` with per-row positions).  When a sequence finishes its
 slot is immediately refilled from the queue — no waiting for the whole batch,
 which is what turns the paper's per-request serving economics into sustained
-throughput (DESIGN.md §3, "batching is first-class").
+throughput (DESIGN.md §4, "batching is first-class").
 
 Transformer-family models (dense / vlm).  Greedy decoding.
 """

@@ -1,0 +1,128 @@
+"""Scenario registry contract and a fast smoke run of the scenario suite
+(tiny traces) asserting the report schema end to end."""
+import csv
+import os
+
+import pytest
+
+from benchmarks import scenario_suite
+from repro.core import scenarios
+from repro.core.autoscaler import Autoscaler
+from repro.core.platform import ServerlessPlatform
+from repro.core.scenarios import POLICY_STACKS, Scenario
+
+REQUIRED = {"sparse", "bursty", "diurnal", "flash_crowd", "multi_function"}
+
+
+# ------------------------------------------------------------ the registry
+def test_registry_covers_the_roadmap_regimes():
+    assert REQUIRED <= set(scenarios.names())
+    assert "baseline" in POLICY_STACKS
+    for name in scenarios.names():
+        sc = scenarios.get(name)
+        assert sc.expected_winner in POLICY_STACKS
+        assert sc.expected_winner != "baseline"
+        assert sc.description and sc.sla.name
+
+
+def test_unknown_scenario_raises_with_candidates():
+    with pytest.raises(KeyError, match="sparse"):
+        scenarios.get("nope")
+
+
+def test_duplicate_registration_rejected():
+    sc = scenarios.get("sparse")
+    with pytest.raises(ValueError):
+        scenarios.register(sc)
+
+
+@pytest.mark.parametrize("name", sorted(REQUIRED))
+def test_scenarios_deploy_and_build_deterministic_traces(name):
+    sc = scenarios.get(name)
+    plat = ServerlessPlatform(seed=0, use_fallback_calibration=True)
+    specs = sc.deploy(plat)
+    assert len(specs) == len(sc.functions)
+    fns = [s.name for s in specs]
+    trace = sc.build_trace(fns, scale=sc.tiny_scale)
+    assert trace and trace == sc.build_trace(fns, scale=sc.tiny_scale)
+    assert {r.fn for r in trace} <= set(fns) | {""}
+    # wrong fleet arity is a loud error, not silent misrouting
+    with pytest.raises(ValueError):
+        sc.build_trace(fns + ["extra@128"])
+
+
+def test_autoscaler_min_pool_floor():
+    auto = Autoscaler(window_s=5.0, margin=1.5, min_pool=3)
+    assert auto.desired_pool([], now=100.0, service_time_s=0.5) == 3
+    # default keeps the original reactive-only behaviour
+    assert Autoscaler().desired_pool([], now=100.0, service_time_s=0.5) == 0
+
+
+def test_autoscaler_rejects_window_beyond_arrival_history():
+    from repro.core.autoscaler import ARRIVAL_HISTORY_S
+    Autoscaler(window_s=ARRIVAL_HISTORY_S)          # boundary is allowed
+    with pytest.raises(ValueError, match="window_s"):
+        Autoscaler(window_s=ARRIVAL_HISTORY_S + 1.0)
+    with pytest.raises(ValueError, match="min_pool"):
+        Autoscaler(min_pool=-1)
+
+
+# ------------------------------------------------------------- suite smoke
+@pytest.fixture(scope="module")
+def tiny_suite(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("scenario_report"))
+    results = scenario_suite.run_suite(["sparse", "bursty", "multi_function"],
+                                       tiny=True, out_dir=out)
+    return results, out
+
+
+def test_suite_smoke_result_schema(tiny_suite):
+    results, _ = tiny_suite
+    assert [r["scenario"] for r in results] == ["sparse", "bursty",
+                                               "multi_function"]
+    n_combos = 1
+    for vals in scenario_suite.AXES.values():
+        n_combos *= len(vals)
+    for res in results:
+        assert res["n_requests"] > 0
+        assert len(res["rows"]) == n_combos
+        for row in res["rows"].values():
+            for field in ("n", "cold_rate", "p50_s", "p95_s", "p99_s",
+                          "cost_per_1k", "sla", "sla_ok", "evictions",
+                          "prewarms"):
+                assert field in row
+            assert 0.0 <= row["cold_rate"] <= 1.0
+            assert row["p50_s"] <= row["p95_s"] <= row["p99_s"]
+        v = res["verdict"]
+        assert v["expected_winner"] in POLICY_STACKS
+        assert isinstance(v["win"], bool)
+        assert v["baseline"] is res["rows"][
+            scenario_suite._stack_key("baseline")]
+
+
+def test_suite_smoke_report_files(tiny_suite):
+    results, out = tiny_suite
+    md = open(os.path.join(out, "scenario_report.md")).read()
+    assert md.count("## Scenario") == len(results)
+    assert md.count("**Verdict**") == len(results)
+    for res in results:
+        assert f"## Scenario `{res['scenario']}`" in md
+    with open(os.path.join(out, "scenario_report.csv")) as f:
+        rows = list(csv.DictReader(f))
+    assert rows and set(rows[0]) == set(scenario_suite.CSV_FIELDS)
+    assert len(rows) == sum(len(r["rows"]) for r in results)
+    assert all(r["sla_ok"] in ("0", "1") for r in rows)
+
+
+def test_policy_sweep_preset_still_wins_and_explains():
+    """The classic preset keeps its WIN check; results carry the numbers
+    main() prints on the NO-WIN path."""
+    from benchmarks.policy_sweep import sweep_results
+    rows, lines, results = sweep_results()
+    block = "\n".join(lines)
+    assert "[WIN]" in block
+    assert len(rows) == 16
+    base = results[("mru", "fixed", 1, False)]
+    adapt = results[("mru", "adaptive", 1, False)]
+    assert adapt["cold_rate"] < base["cold_rate"]
+    assert adapt["p95_s"] < base["p95_s"]

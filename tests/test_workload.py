@@ -1,0 +1,147 @@
+"""Trace library: determinism, empirical rates, JSON replay round-trips,
+and multi-function composition of the scenario-harness generators."""
+import json
+
+import pytest
+
+from repro.core.workload import (Request, diurnal, flash_crowd, mmpp_bursty,
+                                 multi_function_trace, poisson, save_trace,
+                                 trace_replay, trace_to_dict)
+
+
+# ------------------------------------------------------------- determinism
+@pytest.mark.parametrize("gen", [
+    lambda seed: mmpp_bursty(duration_s=5000.0, seed=seed),
+    lambda seed: diurnal(duration_s=5000.0, seed=seed),
+    lambda seed: flash_crowd(duration_s=3000.0, seed=seed),
+    lambda seed: multi_function_trace(
+        {"a": 0.5, "b": lambda s: mmpp_bursty(duration_s=1000.0, seed=s)},
+        1000.0, seed=seed),
+], ids=["mmpp", "diurnal", "flash", "multi"])
+def test_generators_deterministic_under_fixed_seed(gen):
+    assert gen(3) == gen(3)
+    assert gen(3) != gen(4)
+
+
+def test_arrivals_sorted_and_rids_sequential():
+    for trace in (mmpp_bursty(duration_s=5000.0, seed=1),
+                  diurnal(duration_s=5000.0, seed=1),
+                  flash_crowd(duration_s=3000.0, seed=1)):
+        assert [r.rid for r in trace] == list(range(len(trace)))
+        arrivals = [r.arrival_s for r in trace]
+        assert arrivals == sorted(arrivals)
+        assert all(0.0 <= t < 5001.0 for t in arrivals)
+
+
+# --------------------------------------------------------- empirical rates
+def test_mmpp_long_run_rate_matches_dwell_weighted_average():
+    on, off, t_on, t_off = 1.0, 0.1, 30.0, 120.0
+    dur = 200_000.0
+    trace = mmpp_bursty(rate_on_rps=on, rate_off_rps=off, mean_on_s=t_on,
+                        mean_off_s=t_off, duration_s=dur, seed=2)
+    expected = (on * t_on + off * t_off) / (t_on + t_off)
+    assert len(trace) / dur == pytest.approx(expected, rel=0.10)
+    # bursts really are denser than the idle floor
+    bursts = sum(r.tag == "burst" for r in trace)
+    assert bursts / len(trace) > 0.5
+
+
+def test_diurnal_mean_rate_is_base_over_whole_periods():
+    base, period = 0.5, 1000.0
+    trace = diurnal(base_rps=base, amplitude=0.9, period_s=period,
+                    duration_s=20 * period, seed=3)
+    assert len(trace) / (20 * period) == pytest.approx(base, rel=0.05)
+
+
+def test_diurnal_trough_is_quieter_than_peak():
+    period = 1000.0
+    trace = diurnal(base_rps=1.0, amplitude=0.9, period_s=period,
+                    duration_s=10 * period, seed=4)
+    # default phase: trough at t=0 (mod period), peak at period/2
+    def count_in(lo_frac, hi_frac):
+        return sum(1 for r in trace
+                   if lo_frac <= (r.arrival_s % period) / period < hi_frac)
+    assert count_in(0.375, 0.625) > 3 * count_in(0.875, 1.0) + count_in(0, .125)
+
+
+def test_flash_crowd_spike_window_and_rates():
+    trace = flash_crowd(base_rps=0.05, spike_rps=5.0, spike_at_s=500.0,
+                        spike_len_s=100.0, duration_s=2000.0, seed=5)
+    spike = [r for r in trace if r.tag == "spike"]
+    base = [r for r in trace if r.tag == "base"]
+    assert all(500.0 <= r.arrival_s < 600.0 for r in spike)
+    assert len(spike) == pytest.approx(5.0 * 100.0, rel=0.15)
+    assert len(base) == pytest.approx(0.05 * 1900.0, rel=0.5)
+
+
+def test_generator_validation():
+    with pytest.raises(ValueError):
+        diurnal(amplitude=1.5)
+    with pytest.raises(ValueError):
+        mmpp_bursty(rate_on_rps=-1.0)
+    with pytest.raises(ValueError):
+        multi_function_trace({"a": -0.5}, 100.0)
+
+
+# ------------------------------------------------------------- JSON replay
+def test_trace_replay_round_trips_through_json_file(tmp_path):
+    trace = multi_function_trace(
+        {"a": 0.5, "b": lambda s: flash_crowd(duration_s=800.0, seed=s)},
+        1000.0, seed=6)
+    path = str(tmp_path / "trace.json")
+    save_trace(trace, path)
+    assert trace_replay(path) == trace
+    # ... and through an already-parsed dict (e.g. an HTTP payload)
+    assert trace_replay(json.loads(open(path).read())) == trace
+
+
+def test_trace_replay_rejects_unknown_schema_version():
+    payload = trace_to_dict([Request(0, 1.0)])
+    payload["version"] = 99
+    with pytest.raises(ValueError):
+        trace_replay(payload)
+
+
+def test_trace_replay_sorts_by_arrival():
+    payload = {"version": 1, "requests": [
+        {"rid": 1, "arrival_s": 5.0, "tag": "x", "fn": "f"},
+        {"rid": 0, "arrival_s": 2.0},
+    ]}
+    replayed = trace_replay(payload)
+    assert [r.arrival_s for r in replayed] == [2.0, 5.0]
+    assert replayed[1] == Request(1, 5.0, "x", "f")
+
+
+# ------------------------------------------------- multi-function composing
+def test_multi_function_composes_rates_callables_and_lists():
+    canned = [Request(0, 10.0, tag="replayed"), Request(1, 2000.0)]
+    trace = multi_function_trace(
+        {"plain": 0.2,
+         "gen": lambda s: diurnal(base_rps=0.3, duration_s=900.0, seed=s),
+         "canned": canned},
+        1000.0, seed=7)
+    fns = {r.fn for r in trace}
+    assert fns == {"plain", "gen", "canned"}
+    # renumbered in merged arrival order
+    assert [r.rid for r in trace] == list(range(len(trace)))
+    assert [r.arrival_s for r in trace] == sorted(r.arrival_s for r in trace)
+    # list entries keep their tag, are clipped to the horizon
+    canned_out = [r for r in trace if r.fn == "canned"]
+    assert [r.tag for r in canned_out] == ["replayed"]
+    # plain-rate entries draw from the same per-index child stream as an
+    # all-float dict with the same sorted position (index 2 here)
+    plain_only = multi_function_trace({"a0": 0.0, "a1": 0.0, "plain": 0.2},
+                                      1000.0, seed=7)
+    assert ([r.arrival_s for r in trace if r.fn == "plain"]
+            == [r.arrival_s for r in plain_only])
+
+
+def test_multi_function_float_path_unchanged_by_mixed_support():
+    """The all-float path must keep its historical RNG discipline: one
+    child stream per sorted function index, zero-rate entries skipped."""
+    trace = multi_function_trace({"a": 0.5, "b": 1.0, "z": 0.0}, 120.0,
+                                 seed=0)
+    assert {r.fn for r in trace} == {"a", "b"}
+    assert all(r.tag == r.fn for r in trace)
+    b_rate = sum(r.fn == "b" for r in trace) / 120.0
+    assert b_rate == pytest.approx(1.0, rel=0.25)
