@@ -7,15 +7,29 @@ human-readable table block, where:
   * Figs 4-6  -> cold latency vs memory per model
   * Fig 7     -> the step-ramp workload itself (checksum of the schedule)
   * Figs 8-10 -> scalability latency vs memory per model
+  * cold_phase_fig -> the Fig 4-6 cold curves decomposed into the
+    PROVISION / BOOTSTRAP / LOAD anatomy (stacked bars per memory tier,
+    PNG written to artifacts/)
 """
 from __future__ import annotations
 
+import os
+
 from repro.core import billing, metrics
+from repro.core.container import cold_start_breakdown
 from repro.core.function import PAPER_TIERS
 from repro.core.platform import ServerlessPlatform
 from repro.core.workload import step_ramp
 
 MODELS = ("squeezenet", "resnet18", "resnext50")
+
+# chart tokens (validated default palette, light mode): categorical slots
+# 1-3 for the three phases, text/surface tokens for everything else
+_SURFACE = "#fcfcfb"
+_TEXT = "#0b0b0b"
+_TEXT_2 = "#52514e"
+_PHASE_COLORS = {"provision": "#2a78d6", "bootstrap": "#eb6834",
+                 "load": "#1baf7a"}
 
 
 def _tiers_for(plat, model):
@@ -76,6 +90,75 @@ def fig7_workload():
     lines = ["# Fig 7: step ramp (requests per second)"]
     lines.append("  " + " ".join(f"{per_sec[s]}" for s in sorted(per_sec)))
     rows = [("fig7_ramp/total_requests", float(len(reqs)), len(per_sec))]
+    return rows, "\n".join(lines)
+
+
+def cold_phase_fig(plat: ServerlessPlatform,
+                   out_path: str = "artifacts/cold_phase_breakdown.png"):
+    """Stacked per-phase cold-start bars across memory tiers — the paper's
+    cold curves (Figs 4-6) decomposed into the PROVISION / BOOTSTRAP / LOAD
+    anatomy the lifecycle refactor resolves.  Deterministic (analytic
+    breakdown, no jitter); the PNG lands in artifacts/, the CSV rows carry
+    the per-tier totals either way (matplotlib is optional)."""
+    rows, lines = [], []
+    data = {}      # model -> [(mem, breakdown), ...]
+    for model in MODELS:
+        data[model] = []
+        lines.append(f"# Cold anatomy ({model}) — "
+                     f"mem, provision_s, bootstrap_s, load_s, total_s")
+        for mem, spec in _tiers_for(plat, model):
+            bd = cold_start_breakdown(spec)
+            data[model].append((mem, bd))
+            rows.append((f"cold_phase/{model}/{mem}MB", bd.total_s * 1e6,
+                         bd.load_s))
+            lines.append(f"  {mem:5d}  {bd.provision_s:.3f}  "
+                         f"{bd.bootstrap_s:.3f}  {bd.load_s:.3f}  "
+                         f"{bd.total_s:.3f}")
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception as e:          # matplotlib is optional in CI images
+        lines.append(f"# (PNG skipped: matplotlib unavailable: {e!r})")
+        return rows, "\n".join(lines)
+
+    fig, axes = plt.subplots(1, len(MODELS), figsize=(11, 3.4), sharey=True,
+                             facecolor=_SURFACE)
+    for ax, model in zip(axes, MODELS):
+        ax.set_facecolor(_SURFACE)
+        mems = [m for m, _ in data[model]]
+        xs = range(len(mems))
+        bottom = [0.0] * len(mems)
+        for phase in ("provision", "bootstrap", "load"):
+            vals = [getattr(bd, f"{phase}_s") for _, bd in data[model]]
+            ax.bar(xs, vals, bottom=bottom, width=0.62, label=phase,
+                   color=_PHASE_COLORS[phase], edgecolor=_SURFACE,
+                   linewidth=1.5)   # 2px-ish surface gap between segments
+            bottom = [b + v for b, v in zip(bottom, vals)]
+        for x, total in zip(xs, bottom):    # direct labels (relief rule)
+            ax.annotate(f"{total:.1f}", (x, total), textcoords="offset points",
+                        xytext=(0, 3), ha="center", fontsize=7, color=_TEXT_2)
+        ax.set_title(model, fontsize=10, color=_TEXT)
+        ax.set_xticks(list(xs))
+        ax.set_xticklabels([str(m) for m in mems], fontsize=7,
+                           rotation=60, color=_TEXT_2)
+        ax.tick_params(colors=_TEXT_2, length=0)
+        ax.grid(axis="y", color="#e7e6e2", linewidth=0.8)
+        ax.set_axisbelow(True)
+        for side in ("top", "right", "left"):
+            ax.spines[side].set_visible(False)
+        ax.spines["bottom"].set_color("#e7e6e2")
+    axes[0].set_ylabel("cold-start seconds", fontsize=9, color=_TEXT)
+    axes[1].set_xlabel("memory tier (MB)", fontsize=9, color=_TEXT)
+    axes[-1].legend(loc="upper right", fontsize=8, frameon=False,
+                    labelcolor=_TEXT)
+    fig.suptitle("Cold start anatomy by memory tier "
+                 "(PROVISION + BOOTSTRAP + LOAD)", fontsize=11, color=_TEXT)
+    fig.tight_layout()
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    fig.savefig(out_path, dpi=150, facecolor=_SURFACE)
+    plt.close(fig)
+    lines.append(f"# PNG written to {out_path}")
     return rows, "\n".join(lines)
 
 

@@ -34,6 +34,7 @@ def main() -> None:
                lambda: paper_figs.cold_figs(plat),
                paper_figs.fig7_workload,
                lambda: paper_figs.scale_figs(plat),
+               lambda: paper_figs.cold_phase_fig(plat),
                lambda: keepalive_study.ttl_frontier(plat),
                lambda: keepalive_study.prewarm_ablation(plat),
                lambda: policy_sweep.policy_sweep(plat),

@@ -1,13 +1,16 @@
 """Scenario suite: policy sweeps across the named workload scenarios.
 
 For every scenario in ``repro.core.scenarios`` this runner sweeps the full
-(placement x keepalive x scaling x concurrency x batching) cross-product on
-the scenario's trace and fleet, grades each combo against the scenario's
-SLA, and emits a per-scenario markdown + CSV report with cold-start rate,
-p50/p95/p99 latency, SLA verdicts, and cost per 1k invocations.  Each
-scenario ends with a verdict comparing its ``expected_winner`` policy stack
-against the Lambda baseline (fixed TTL, implicit scaling) on cold rate and
-p95 — the evidence ROADMAP's bursty/diurnal open item asks for.
+(placement x keepalive x scaling x coldstart x concurrency x batching)
+cross-product on the scenario's trace and fleet, grades each combo against
+the scenario's SLA, and emits a per-scenario markdown + CSV report with
+cold-start rate, p50/p95/p99 latency, SLA verdicts, and cost per 1k
+invocations (mitigation spend — snapshot storage, bare-pool idle — folded
+in and broken out).  Each scenario ends with a verdict comparing its
+``expected_winner`` policy stack against the Lambda baseline (fixed TTL,
+implicit scaling, full colds) on cold rate and p95; scenarios with a
+``rival`` additionally require the winner to beat that pre-mitigation
+stack on cold-start rate.
 
 ``benchmarks/policy_sweep.py`` is a thin preset of this suite (the sparse
 scenario restricted to the classic axes); its CSV output is bit-compatible
@@ -40,18 +43,21 @@ AXES = {
     "placement": ("mru", "lru"),
     "keepalive": ("fixed", "adaptive"),
     "scaling": ("lambda", "predictive"),
+    "coldstart": ("full", "snapshot", "layered", "package_cache"),
     "concurrency": (1, 4),
     "batching": (None, BatchingConfig(max_batch=4, max_wait_s=0.5)),
 }
 
-CSV_FIELDS = ("scenario", "placement", "keepalive", "scaling", "concurrency",
-              "batching", "n", "cold_rate", "p50_s", "p95_s", "p99_s",
-              "cost_per_1k", "sla", "sla_ok", "evictions", "prewarms")
+CSV_FIELDS = ("scenario", "placement", "keepalive", "scaling", "coldstart",
+              "concurrency", "batching", "n", "cold_rate", "p50_s", "p95_s",
+              "p99_s", "cost_per_1k", "mitigation_per_1k", "sla", "sla_ok",
+              "evictions", "prewarms")
 
 
 def _combo_key(combo: dict) -> tuple:
     return (combo["placement"], combo["keepalive"], combo["scaling"],
-            combo["concurrency"], bool(combo["batching"]))
+            combo["coldstart"], combo["concurrency"],
+            bool(combo["batching"]))
 
 
 def _stack_key(stack_name: str) -> tuple:
@@ -59,32 +65,45 @@ def _stack_key(stack_name: str) -> tuple:
 
 
 def run_combo(specs, trace, *, placement="mru", keepalive="fixed",
-              scaling="lambda", concurrency=1, batching=None,
-              max_containers=0, seed=0, sla=None,
+              scaling="lambda", coldstart="full", concurrency=1,
+              batching=None, max_containers=0, seed=0, sla=None,
               scenario: Scenario | None = None) -> dict:
     """Run one policy combo on one trace and summarize it.
 
     Stateful policies are freshly constructed per call (scenario-tuned
-    factories or registry names), so combos never share histogram or
-    autoscaler state.  With ``scaling="lambda"`` and ``max_containers=0``
-    this is exactly the classic ``policy_sweep`` run (bit-compatible).
+    factories or registry names), so combos never share histogram /
+    autoscaler / snapshot state.  With ``scaling="lambda"``,
+    ``coldstart="full"`` and ``max_containers=0`` this is exactly the
+    classic ``policy_sweep`` run (bit-compatible).
+
+    ``cost_per_1k`` folds in the platform-side mitigation spend (snapshot
+    storage, bare-pool idle — zero under ``full``), also broken out as
+    ``mitigation_per_1k``.
     """
     if scenario is not None:
         if keepalive == "adaptive" and scenario.adaptive is not None:
             keepalive = scenario.adaptive()
         if scaling == "predictive" and scenario.predictive is not None:
             scaling = scenario.predictive()
+        if coldstart != "full" and scenario.coldstart is not None:
+            tuned = scenario.coldstart()
+            if tuned.name == coldstart:
+                coldstart = tuned
     sim = ClusterSimulator(specs, seed=seed, placement=placement,
                            keepalive=copy.deepcopy(keepalive),
                            scaling=copy.deepcopy(scaling),
+                           coldstart=copy.deepcopy(coldstart),
                            concurrency=concurrency, batching=batching,
                            max_containers=max_containers)
     recs = sim.run(list(trace))
     s = metrics.summarize(recs)
+    mit_per_1k = sim.mitigation_cost / max(s.n, 1) * 1000.0
     row = {"n": s.n,
            "cold_rate": s.n_cold / max(s.n, 1),
            "p50_s": s.p50_s, "p95_s": s.p95_s, "p99_s": s.p99_s,
-           "cost_per_1k": s.total_cost / max(s.n, 1) * 1000.0,
+           "cost_per_1k": (s.total_cost / max(s.n, 1) * 1000.0
+                           + mit_per_1k),
+           "mitigation_per_1k": mit_per_1k,
            "evictions": sim.evictions, "prewarms": sim.prewarms}
     if sla is not None:
         ev = sla.evaluate([r for r in recs if r.tag != "prime"])
@@ -124,6 +143,16 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
         "win": (winner["cold_rate"] < base["cold_rate"]
                 and winner["p95_s"] < base["p95_s"]),
     }
+    if scenario.rival:
+        # the mitigation grade: the winner must also beat the best
+        # pre-mitigation stack on cold-start rate, not just the baseline
+        rival = rows[_stack_key(scenario.rival)]
+        verdict["rival"] = scenario.rival
+        verdict["rival_row"] = rival
+        verdict["beats_rival_cold"] = \
+            winner["cold_rate"] < rival["cold_rate"]
+        verdict["win"] = bool(verdict["win"]
+                              and verdict["beats_rival_cold"])
     return {"scenario": scenario.name, "description": scenario.description,
             "fleet": [s.name for s in specs], "n_requests": len(trace),
             "sla": scenario.sla.name, "scale": scale,
@@ -133,8 +162,8 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
 
 # ------------------------------------------------------------------ reporting
 def _fmt_combo(key: tuple) -> tuple:
-    p, k, s, c, b = key
-    return p, k, s, str(c), ("y" if b else "n")
+    p, k, s, cs, c, b = key
+    return p, k, s, cs, str(c), ("y" if b else "n")
 
 
 def scenario_markdown(result: dict) -> str:
@@ -146,19 +175,20 @@ def scenario_markdown(result: dict) -> str:
                 if result["max_containers"] else ""),
              f"- trace: {result['n_requests']} requests "
              f"(scale {result['scale']:g}), SLA `{result['sla']}`", "",
-             "| placement | keepalive | scaling | conc | batch | cold "
-             "| p50 s | p95 s | p99 s | $/1k | SLA | evict | prewarm |",
-             "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+             "| placement | keepalive | scaling | coldstart | conc | batch "
+             "| cold | p50 s | p95 s | p99 s | $/1k | mit$/1k | SLA "
+             "| evict | prewarm |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for key in sorted(result["rows"]):
         r = result["rows"][key]
-        p, k, s, c, b = _fmt_combo(key)
+        p, k, s, cs, c, b = _fmt_combo(key)
         sla_cell = ("ok" if r["sla_ok"]
                     else "FAIL " + "/".join(r["sla_violations"]))
         lines.append(
-            f"| {p} | {k} | {s} | {c} | {b} | {r['cold_rate']:.2%} "
+            f"| {p} | {k} | {s} | {cs} | {c} | {b} | {r['cold_rate']:.2%} "
             f"| {r['p50_s']:.3f} | {r['p95_s']:.3f} | {r['p99_s']:.3f} "
-            f"| {r['cost_per_1k']:.4f} | {sla_cell} "
-            f"| {r['evictions']} | {r['prewarms']} |")
+            f"| {r['cost_per_1k']:.4f} | {r['mitigation_per_1k']:.4f} "
+            f"| {sla_cell} | {r['evictions']} | {r['prewarms']} |")
     v = result["verdict"]
     b, w = v["baseline"], v["winner"]
     lines += ["",
@@ -167,14 +197,21 @@ def scenario_markdown(result: dict) -> str:
               f"p95 {b['p95_s']:.3f}s -> {w['p95_s']:.3f}s, "
               f"$/1k {b['cost_per_1k']:.4f} -> {w['cost_per_1k']:.4f} "
               f"[{'WIN' if v['win'] else 'NO-WIN'}]"]
+    if "rival" in v:
+        rr = v["rival_row"]
+        lines += [f"  (mitigation grade vs `{v['rival']}`: cold "
+                  f"{rr['cold_rate']:.2%} -> {w['cold_rate']:.2%} "
+                  f"[{'beats rival' if v['beats_rival_cold'] else 'MISSES'}])"]
     return "\n".join(lines)
 
 
 def suite_markdown(results: list) -> str:
     head = ["# Scenario suite report", "",
-            "Policy sweep (placement x keepalive x scaling x concurrency x "
-            "batching) per named scenario; verdicts compare each scenario's "
-            "expected-winner stack against the Lambda baseline.", ""]
+            "Policy sweep (placement x keepalive x scaling x coldstart x "
+            "concurrency x batching) per named scenario; verdicts compare "
+            "each scenario's expected-winner stack against the Lambda "
+            "baseline (and, where set, its pre-mitigation rival on cold "
+            "rate).", ""]
     wins = sum(r["verdict"]["win"] for r in results)
     head.append(f"Scenarios: {len(results)}; expected-winner verdicts: "
                 f"{wins}/{len(results)} WIN.")
@@ -187,15 +224,17 @@ def suite_csv_rows(results: list) -> list:
     for res in results:
         for key in sorted(res["rows"]):
             r = res["rows"][key]
-            p, k, s, c, b = _fmt_combo(key)
+            p, k, s, cs, c, b = _fmt_combo(key)
             out.append({"scenario": res["scenario"], "placement": p,
-                        "keepalive": k, "scaling": s, "concurrency": c,
+                        "keepalive": k, "scaling": s, "coldstart": cs,
+                        "concurrency": c,
                         "batching": b, "n": r["n"],
                         "cold_rate": f"{r['cold_rate']:.6f}",
                         "p50_s": f"{r['p50_s']:.6f}",
                         "p95_s": f"{r['p95_s']:.6f}",
                         "p99_s": f"{r['p99_s']:.6f}",
                         "cost_per_1k": f"{r['cost_per_1k']:.6f}",
+                        "mitigation_per_1k": f"{r['mitigation_per_1k']:.6f}",
                         "sla": r["sla"], "sla_ok": int(r["sla_ok"]),
                         "evictions": r["evictions"],
                         "prewarms": r["prewarms"]})

@@ -1,0 +1,87 @@
+"""Sim-loop throughput benchmark: events/sec on a large sparse trace.
+
+The cluster simulator is the substrate every scenario sweep and policy
+study runs on, so its raw event throughput bounds how much experiment the
+repo can afford.  This benchmark times the default (Lambda) policy stack on
+a 1M-request sparse Poisson trace — the regime with the most keep-alive
+churn per request — and writes ``BENCH_simloop.json`` so the perf
+trajectory is recorded PR over PR (the PR-3 motivation: ``_active_total``
+recomputed fleet-wide state on every arrival; it is now an O(1) counter).
+
+Run:
+
+    PYTHONPATH=src python -m benchmarks.simloop_bench              # 1M reqs
+    PYTHONPATH=src python -m benchmarks.simloop_bench --tiny      # CI smoke
+    PYTHONPATH=src python -m benchmarks.simloop_bench -n 200000 \
+        --out artifacts/BENCH_simloop.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core.cluster import ClusterSimulator
+from repro.core.function import FunctionSpec, Handler
+from repro.core.workload import poisson
+
+# sparse regime: mean gap 250 s vs the 480 s TTL, so a steady fraction of
+# requests cold-start and every request schedules an expiry check
+RATE_RPS = 0.004
+TINY_N = 20_000
+
+HANDLER = Handler(name="bench", base_cpu_seconds=0.2,
+                  bootstrap_cpu_seconds=1.2, package_mb=45.0,
+                  peak_memory_mb=229.0)
+
+
+def run_bench(n_requests: int, *, seed: int = 0) -> dict:
+    """Time one default-stack run serving ``n_requests``; returns the
+    result row (wall seconds, events/sec, requests/sec)."""
+    spec = FunctionSpec(handler=HANDLER, memory_mb=1024)
+    duration_s = n_requests / RATE_RPS
+    trace = poisson(RATE_RPS, duration_s, seed=seed)
+    sim = ClusterSimulator(spec, seed=seed)
+    t0 = time.perf_counter()
+    records = sim.run(trace)
+    wall_s = time.perf_counter() - t0
+    return {
+        "n_requests": len(trace),
+        "n_records": len(records),
+        "events": sim.events,
+        "cold_starts": sim.cold_starts,
+        "wall_s": wall_s,
+        "events_per_sec": sim.events / wall_s if wall_s > 0 else 0.0,
+        "requests_per_sec": len(records) / wall_s if wall_s > 0 else 0.0,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("-n", "--n-requests", type=int, default=1_000_000,
+                    help="trace size (default 1M)")
+    ap.add_argument("--tiny", action="store_true",
+                    help=f"CI smoke size ({TINY_N} requests)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="artifacts/BENCH_simloop.json",
+                    help="result JSON path")
+    args = ap.parse_args(argv)
+
+    n = TINY_N if args.tiny else args.n_requests
+    result = run_bench(n, seed=args.seed)
+    result["tiny"] = bool(args.tiny)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"[simloop_bench] {result['n_requests']} requests, "
+          f"{result['events']} events in {result['wall_s']:.2f}s "
+          f"-> {result['events_per_sec']:,.0f} events/s "
+          f"({result['requests_per_sec']:,.0f} req/s); "
+          f"written to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -47,3 +47,31 @@ def invocation_cost(exec_seconds: float, memory_mb: int,
     if include_request_charge:
         c += REQUEST_PRICE
     return c
+
+
+# --- cold-start mitigation surcharges (beyond the paper's Table 1) ---------
+# The mitigation policies trade a little always-on platform spend for the
+# cold-start latency they remove; surfacing that spend keeps the scenario
+# suite's cost columns honest.  Rates follow the shape of 2017-era AWS
+# adjacent services rather than exact SKUs.
+
+SNAPSHOT_GB_MONTH_PRICE = 0.045   # $/GB-month held (EBS-snapshot-like)
+SECONDS_PER_MONTH = 30 * 24 * 3600.0
+BARE_SANDBOX_MB = 128             # a bootstrapped, model-less sandbox bills
+                                  # at the smallest memory tier
+
+
+def snapshot_storage_cost(size_mb: float, held_s: float) -> float:
+    """Storage cost of holding a function snapshot of ``size_mb`` for
+    ``held_s`` seconds (SnapshotRestore's amortized price)."""
+    return (size_mb / 1024.0) * SNAPSHOT_GB_MONTH_PRICE * \
+        (held_s / SECONDS_PER_MONTH)
+
+
+def sandbox_idle_cost(idle_seconds: float) -> float:
+    """Keep-alive cost of one bare (bootstrapped-but-unloaded) sandbox —
+    the LayeredPool's standing charge, billed in the usual 100 ms ticks at
+    the smallest tier's price."""
+    if idle_seconds <= 0:
+        return 0.0
+    return billed_ticks(idle_seconds) * price_per_100ms(BARE_SANDBOX_MB)

@@ -23,7 +23,21 @@ from repro.core.function import Handler
 from repro.models import cnn
 from repro.models.common import ModelConfig
 
-CAL_PATH = "artifacts/calibration.json"
+# Calibration cache location.  Anchored to the repo root (NOT the process
+# cwd — a cwd-relative path silently re-measured whenever a benchmark ran
+# from another directory, producing host-dependent "deterministic" runs).
+# Override with the REPRO_CALIBRATION env var (read at call time, so tests
+# and deploy scripts can point at a pre-measured file).
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+
+def default_cal_path() -> str:
+    return os.environ.get("REPRO_CALIBRATION") or \
+        os.path.join(_REPO_ROOT, "artifacts", "calibration.json")
+
+
+CAL_PATH = default_cal_path()   # module-load snapshot (back-compat constant)
 
 # paper §3 ground truth per model: (package MB, peak memory MB, 2017-era
 # full-CPU prediction seconds used if no local calibration is available)
@@ -54,7 +68,8 @@ def _measure(variant: str, image_size: int = 224, repeats: int = 5) -> dict:
             "first_call_seconds": first}
 
 
-def calibrate(path: str = CAL_PATH, force: bool = False) -> dict:
+def calibrate(path: str | None = None, force: bool = False) -> dict:
+    path = path or default_cal_path()
     if os.path.exists(path) and not force:
         with open(path) as f:
             return json.load(f)

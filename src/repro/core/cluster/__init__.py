@@ -4,17 +4,21 @@ Public surface:
   * ClusterSimulator — the event loop (cluster.py)
   * RequestRecord    — the per-request result row (events.py)
   * BatchingConfig   — batching-aware container mode (router.py)
-  * policies         — placement / keep-alive / scaling policy classes
+  * policies         — placement / keep-alive / scaling / cold-start
+                       policy classes
 """
 from repro.core.cluster.cluster import ClusterSimulator
 from repro.core.cluster.events import RequestRecord
-from repro.core.cluster.policies import (AdaptiveTTL, FixedTTL,
-                                         LambdaImplicit, LeastLoadedPlacement,
+from repro.core.cluster.policies import (AdaptiveTTL, ColdStartPolicy,
+                                         FixedTTL, FullCold, LambdaImplicit,
+                                         LayeredPool, LeastLoadedPlacement,
                                          LRUPlacement, MRUPlacement,
-                                         PredictiveWarmPool)
+                                         PackageCache, PredictiveWarmPool,
+                                         SnapshotRestore)
 from repro.core.cluster.router import BatchingConfig
 
 __all__ = ["ClusterSimulator", "RequestRecord", "BatchingConfig",
            "AdaptiveTTL", "FixedTTL", "LambdaImplicit",
            "LeastLoadedPlacement", "LRUPlacement", "MRUPlacement",
-           "PredictiveWarmPool"]
+           "PredictiveWarmPool", "ColdStartPolicy", "FullCold",
+           "SnapshotRestore", "LayeredPool", "PackageCache"]

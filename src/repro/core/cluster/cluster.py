@@ -1,20 +1,30 @@
 """Policy-driven discrete-event cluster simulator.
 
 Generalizes the original single-function ``Simulator`` event loop into a
-multi-function cluster with pluggable placement / keep-alive / scaling
-policies, optional per-container concurrency, and batching-aware fleets
-(``repro.serving.batcher`` wired into the event loop).
+multi-function cluster with pluggable placement / keep-alive / scaling /
+cold-start policies, optional per-container concurrency, and batching-aware
+fleets (``repro.serving.batcher`` wired into the event loop).
 
 Backwards compatibility is a hard invariant: with the default policy stack
-(MRU placement, fixed-TTL keep-alive, Lambda-implicit scaling, concurrency 1,
-no batching) the event sequence — heap tie-breaking, RNG draw order,
-container id allocation — is identical to the old monolith, so the produced
-``RequestRecord`` streams match bit-for-bit (see tests/test_cluster.py).
+(MRU placement, fixed-TTL keep-alive, Lambda-implicit scaling, FullCold
+cold starts, concurrency 1, no batching) the event sequence — heap
+tie-breaking, RNG draw order, container id allocation — is identical to the
+old monolith, so the produced ``RequestRecord`` streams match bit-for-bit
+(see tests/test_cluster.py).
 
 Event kinds (events.py): ARRIVAL / REQUEUE feed the router; COMPLETE frees a
 container slot; EXPIRE evaluates the keep-alive deadline; PREWARM_READY
 warms a predictively-provisioned container; FLUSH fires a batching fleet's
-``max_wait_s`` deadline.
+``max_wait_s`` deadline; PHASE_DONE advances a cold-starting container one
+lifecycle phase (PROVISION -> BOOTSTRAP -> LOAD / RESTORE).
+
+Cold starts are phase-resolved: a ``ColdStartPolicy`` plans which phases a
+container still owes (a bare-pool claim owes only LOAD, a snapshot hit
+PROVISION + RESTORE, ...), one jitter draw covers the remaining total (the
+same RNG discipline for every policy), and — for every policy except the
+bit-parity-pinned FullCold — PHASE_DONE events walk the container through
+the intermediate states at the jitter-scaled phase boundaries.  Per-phase
+wall times land on the ``RequestRecord`` either way.
 """
 from __future__ import annotations
 
@@ -26,14 +36,15 @@ from repro.core import billing, resources
 from repro.core.autoscaler import ARRIVAL_HISTORY_S
 from repro.core.cluster import events as ev
 from repro.core.cluster.events import EventQueue, RequestRecord
-from repro.core.cluster.policies import (FixedTTL, KeepalivePolicy,
-                                         LambdaImplicit, PlacementPolicy,
-                                         ScalingPolicy, make_keepalive,
+from repro.core.cluster.policies import (ColdStartPolicy, FixedTTL, FullCold,
+                                         KeepalivePolicy, LambdaImplicit,
+                                         PlacementPolicy, ScalingPolicy,
+                                         make_coldstart, make_keepalive,
                                          make_placement, make_scaling,
                                          warm_exec_estimate)
-from repro.core.cluster.router import BatchingConfig, Fleet, Router
-from repro.core.container import Container, State
-from repro.core.function import FunctionSpec
+from repro.core.cluster.router import BarePool, BatchingConfig, Fleet, Router
+from repro.core.container import Container, Phase, State
+from repro.core.function import FunctionSpec, Handler
 from repro.core.workload import Request
 from repro.serving.batcher import PendingRequest
 
@@ -49,9 +60,10 @@ class ClusterSimulator:
     ----------
     specs: one FunctionSpec, a list of them, or ``{name: spec}``.  Requests
         route by ``Request.fn`` (empty -> the first/default fleet).
-    placement / keepalive / scaling: policy instances or registry names
-        (``"mru"|"lru"|"least_loaded"``, ``"fixed"|"adaptive"``,
-        ``"lambda"|"predictive"``).
+    placement / keepalive / scaling / coldstart: policy instances or
+        registry names (``"mru"|"lru"|"least_loaded"``,
+        ``"fixed"|"adaptive"``, ``"lambda"|"predictive"``,
+        ``"full"|"snapshot"|"layered"|"package_cache"``).
     concurrency: in-flight requests a single container may hold; requests
         beyond the first slow each other down by ``contention`` each.
     batching: a ``BatchingConfig`` applied to every fleet, or a
@@ -61,7 +73,7 @@ class ClusterSimulator:
 
     def __init__(self, specs: Union[FunctionSpec, list, dict], *,
                  placement="mru", keepalive=None, scaling=None,
-                 keepalive_s: float = 480.0, seed: int = 0,
+                 coldstart=None, keepalive_s: float = 480.0, seed: int = 0,
                  jitter: float = 0.03, max_containers: int = 0,
                  concurrency: int = 1, contention: float = 0.3,
                  batching: Union[BatchingConfig, dict, None] = None):
@@ -81,18 +93,31 @@ class ClusterSimulator:
         self.keepalive: KeepalivePolicy = make_keepalive(keepalive,
                                                          keepalive_s)
         self.scaling: ScalingPolicy = make_scaling(scaling)
+        self.coldstart: ColdStartPolicy = make_coldstart(coldstart)
 
         self.rng = np.random.default_rng(seed)
         # Fast paths that also pin default-stack bit-parity: FixedTTL never
-        # needs lazy idle re-checks, LambdaImplicit never tracks arrivals.
+        # needs lazy idle re-checks, LambdaImplicit never tracks arrivals,
+        # FullCold charges the whole cold anatomy in one collapsed step
+        # (the PR-1 golden discipline) instead of PHASE_DONE events.
         self._lazy_evict = not isinstance(self.keepalive, FixedTTL)
         self._track_arrivals = not isinstance(self.scaling, LambdaImplicit)
+        self._phased = not isinstance(self.coldstart, FullCold)
         self.jitter = jitter
         self.max_containers = max_containers
         self.concurrency = max(1, int(concurrency))
         self.contention = contention
         self.records: list[RequestRecord] = []
         self.prewarms = 0
+        self.events = 0            # loop iterations (simloop_bench reads it)
+        self._active_n = 0         # O(1) live-container count across fleets
+        # LayeredPool infrastructure: the cluster-shared bare-sandbox pool
+        self.pool: Optional[BarePool] = (BarePool()
+                                         if self.coldstart.pool_size > 0
+                                         else None)
+        self._pool_spec: Optional[FunctionSpec] = None
+        self.mitigation_cost = 0.0  # snapshot storage + pool idle ($, filled
+        self.sim_end_s = 0.0        #  by run()'s finalization)
 
     # ------------------------------------------------------------- accessors
     @property
@@ -126,7 +151,18 @@ class ClusterSimulator:
                                              fleet.spec.memory_mb))
 
     def _active_total(self) -> int:
-        return sum(f.active_count() for f in self.fleets.values())
+        """Live containers across all fleets — an O(1) counter maintained by
+        ``_add_container``/``_evict`` (recomputing per arrival/prewarm was
+        the sim loop's hottest redundant work; simloop_bench tracks it)."""
+        return self._active_n
+
+    def _add_container(self, fleet: Fleet, c: Container) -> None:
+        fleet.add_container(c)
+        self._active_n += 1
+
+    def _evict(self, fleet: Fleet, cid: int) -> None:
+        fleet.evict(cid)
+        self._active_n -= 1
 
     def _schedule_expire(self, q: EventQueue, fleet: Fleet, cid: int,
                          deadline: float) -> None:
@@ -134,14 +170,137 @@ class ClusterSimulator:
             fleet.expire_sched[cid] = deadline
             q.push(deadline, ev.EXPIRE, (fleet.name, cid))
 
+    # -------------------------------------------------- cold-start phases
+    def _schedule_phases(self, q: EventQueue, fname: str, c: Container,
+                         t: float, plan: list) -> tuple:
+        """Charge ``plan`` (remaining ``(Phase, seconds)`` pairs) with ONE
+        jitter draw and drive the container through it with PHASE_DONE
+        events.  Returns ``(setup_s, walls)`` where ``walls`` maps each
+        Phase to its jittered wall time; the last boundary is pinned to
+        ``t + setup_s`` so the chain lands exactly on the dispatch-side
+        ready time."""
+        total = sum(d for _, d in plan)
+        if total <= 0.0:
+            return 0.0, {}
+        setup = self._jit(total)
+        factor = setup / total
+        walls: dict = {}
+        entries = []
+        cum = 0.0
+        for i, (ph, dur) in enumerate(plan):
+            if i < len(plan) - 1:
+                w = dur * factor
+                cum += w
+                boundary = t + cum
+            else:
+                w = setup - cum
+                boundary = t + setup
+            walls[ph] = w
+            entries.append((ph, w, boundary))
+        c.phase_plan = entries
+        c.phase_idx = 0
+        q.push(entries[0][2], ev.PHASE_DONE, (fname, c.cid))
+        return setup, walls
+
+    def _cold_setup(self, q: EventQueue, fleet: Fleet, c: Container,
+                    t: float) -> tuple:
+        """Charge the container's remaining cold phases.  FullCold keeps the
+        pre-refactor collapsed step (identical RNG call, no extra events —
+        the bit-parity contract) while still recording an analytic per-phase
+        split that sums exactly to the collapsed total; every other policy
+        plans the remaining phases and walks them with PHASE_DONE events."""
+        if not self._phased:
+            bd = c.cold_breakdown()
+            setup = self._jit(bd.total_s)
+            factor = setup / bd.total_s if bd.total_s > 0 else 0.0
+            prov = bd.provision_s * factor
+            boot = bd.bootstrap_s * factor
+            walls = {Phase.PROVISION: prov, Phase.BOOTSTRAP: boot,
+                     Phase.LOAD: setup - prov - boot}
+            for ph, w in walls.items():
+                c.mark_done(ph, w)
+            return setup, walls
+        plan = self.coldstart.plan(fleet.spec, c)
+        return self._schedule_phases(q, fleet.name, c, t, plan)
+
+    def _spawn_pool_sandbox(self, q: EventQueue, t: float) -> None:
+        """Start provisioning one bare sandbox for the shared pool (initial
+        fill and post-claim replenishment)."""
+        if self._pool_spec is None:
+            self._pool_spec = FunctionSpec(
+                handler=Handler(name="_bare", base_cpu_seconds=0.0,
+                                bootstrap_cpu_seconds=(
+                                    self.coldstart.bootstrap_cpu_seconds),
+                                package_mb=0.0, peak_memory_mb=0.0),
+                memory_mb=self.coldstart.pool_memory_mb)
+        c = Container(self._pool_spec, created_at=t, role="pool")
+        self.pool.add(c)
+        self._schedule_phases(q, "", c, t, self.coldstart.pool_plan())
+
+    def _on_phase_done(self, q: EventQueue, t: float, payload) -> None:
+        fname, cid = payload
+        if fname:
+            fleet = self.fleets[fname]
+            c = fleet.containers.get(cid)
+        else:
+            fleet = None
+            c = self.pool.sandboxes.get(cid) if self.pool else None
+        if c is None or c.state == State.EVICTED or \
+                c.phase_idx >= len(c.phase_plan):
+            return
+        ph, wall, _ = c.phase_plan[c.phase_idx]
+        c.mark_done(ph, wall)
+        c.phase_idx += 1
+        if c.phase_idx < len(c.phase_plan):
+            # advance to the next phase; BUSY containers (dispatch-bound
+            # colds already serving a request) keep their scheduling state,
+            # idle chains park at the lifecycle milestone just reached
+            if c.state != State.BUSY:
+                c.state = c.parked_state(ph)
+            q.push(c.phase_plan[c.phase_idx][2], ev.PHASE_DONE, payload)
+            return
+        # ---- chain complete
+        if c.role == "pool":
+            c.state = State.BOOTSTRAPPED
+            self.pool.park(c, t)
+            return
+        # dispatch- or prewarm-bound chains end with the model available
+        # (LOAD, RESTORE, or a package-cache hit that skipped LOAD)
+        c.completed.add(Phase.LOAD)
+        if c.role == "prewarm":
+            fleet.pending_prewarms -= 1
+            fleet.prewarm_etas.remove(t)
+            c.state = State.WARM
+            c.ready_at = t
+            c.last_used_at = t
+            fleet.idle.append((t, cid))
+            self._schedule_expire(q, fleet, cid,
+                                  t + self.keepalive.ttl(fname))
+        self.coldstart.on_loaded(fname, fleet.spec, t)
+
+    @staticmethod
+    def _cold_kind(walls: dict) -> str:
+        if Phase.RESTORE in walls:
+            return "restore"
+        if Phase.LOAD not in walls:
+            return "cache"
+        if Phase.PROVISION not in walls and Phase.BOOTSTRAP not in walls:
+            return "pool"
+        return "full"
+
     # ------------------------------------------------------------------- run
     def run(self, requests: list) -> list[RequestRecord]:
         q = EventQueue()
         for r in requests:
             q.push(r.arrival_s, ev.ARRIVAL, r)
+        if self.pool is not None and not self.pool.sandboxes:
+            for _ in range(self.coldstart.pool_size):   # initial pool fill
+                self._spawn_pool_sandbox(q, 0.0)
 
+        t = 0.0
         while q:
             t, _, kind, payload = q.pop()
+            self.events += 1
             if kind == ev.COMPLETE:
                 self._on_complete(t, payload)
             elif kind == ev.EXPIRE:
@@ -150,12 +309,28 @@ class ClusterSimulator:
                 self._on_prewarm_ready(q, t, payload)
             elif kind == ev.FLUSH:
                 self._on_flush(q, t, payload)
+            elif kind == ev.PHASE_DONE:
+                self._on_phase_done(q, t, payload)
             elif kind == BATCH_RETRY:
                 fname, reqs = payload
                 self._dispatch(q, self.fleets[fname], t, reqs)
             else:  # ARRIVAL / REQUEUE
                 self._on_arrival(q, t, payload, fresh=(kind == ev.ARRIVAL))
+        self._finalize(t)
         return self.records
+
+    def _finalize(self, t_end: float) -> None:
+        """Settle the platform-side mitigation spend (snapshot storage held
+        to end of run, bare-pool idle) — zero under FullCold."""
+        self.sim_end_s = t_end
+        cost = 0.0
+        if self.pool is not None:
+            self.pool.settle(t_end)
+            cost += billing.sandbox_idle_cost(self.pool.idle_sandbox_s)
+        for _fn, size_mb, written_at in self.coldstart.snapshots():
+            cost += billing.snapshot_storage_cost(
+                size_mb, max(0.0, t_end - written_at))
+        self.mitigation_cost = cost
 
     # ------------------------------------------------------------- complete
     def _on_complete(self, t: float, payload) -> None:
@@ -180,7 +355,7 @@ class ClusterSimulator:
             return
         ttl = self.keepalive.ttl(fname)
         if t - c.last_used_at >= ttl - 1e-9:
-            fleet.evict(cid)
+            self._evict(fleet, cid)
         else:
             # Not yet expired under the *current* TTL (it may have grown, or
             # the container was reused).  A reuse already scheduled a later
@@ -214,12 +389,20 @@ class ClusterSimulator:
                     self._active_total() >= self.max_containers:
                 break
             c = Container(fleet.spec, created_at=t)
-            fleet.add_container(c)
+            self._add_container(fleet, c)
             fleet.pending_prewarms += 1
             self.prewarms += 1
-            setup = self._jit(c.cold_breakdown().total_s)
-            fleet.prewarm_etas.append(t + setup)
-            q.push(t + setup, ev.PREWARM_READY, (fleet.name, c.cid))
+            if not self._phased:
+                setup = self._jit(c.cold_breakdown().total_s)
+                fleet.prewarm_etas.append(t + setup)
+                q.push(t + setup, ev.PREWARM_READY, (fleet.name, c.cid))
+            else:
+                # phase-resolved prewarm: the PHASE_DONE chain warms the
+                # container (and e.g. a snapshot hit provisions it faster)
+                c.role = "prewarm"
+                setup, _ = self._schedule_phases(
+                    q, fleet.name, c, t, self.coldstart.plan(fleet.spec, c))
+                fleet.prewarm_etas.append(t + setup)
 
     # -------------------------------------------------------------- arrival
     def _on_arrival(self, q: EventQueue, t: float, req: Request,
@@ -278,7 +461,7 @@ class ClusterSimulator:
         for _, cid in fleet.idle:
             c = fleet.containers[cid]
             if c.state == State.WARM and now - c.last_used_at >= ttl - 1e-9:
-                fleet.evict(cid)
+                self._evict(fleet, cid)
 
     def _candidates(self, fleet: Fleet, now: float) -> list:
         if self._lazy_evict:
@@ -300,7 +483,7 @@ class ClusterSimulator:
                     else {})
         cands = self._candidates(fleet, t)
         chosen: Optional[Container] = None
-        cold = False
+        cold = claimed = False
         cid = self.placement.choose(cands, inflight) if cands else None
         if cid is not None:
             chosen = fleet.containers[cid]
@@ -310,10 +493,21 @@ class ClusterSimulator:
                     self._active_total() >= self.max_containers:
                 if not self._make_room(q, fleet, t, reqs):
                     return                      # requeued behind a busy slot
-            cold = True
-            chosen = Container(fleet.spec, created_at=t)
-            fleet.add_container(chosen)
-            fleet.cold_starts += 1
+            chosen = self.pool.claim(t) if self.pool is not None else None
+            if chosen is not None:
+                # bare-sandbox claim: a PREWARM start in the OpenWhisk
+                # taxonomy, not a cold start — the sandbox was provisioned
+                # and bootstrapped ahead of demand, the request only pays
+                # the LOAD phase.  Re-spec to this fleet's tier (balloon
+                # resize, modelled free).
+                claimed = True
+                chosen.spec = fleet.spec
+                chosen.role = "dispatch"
+            else:
+                cold = True
+                chosen = Container(fleet.spec, created_at=t)
+                fleet.cold_starts += 1
+            self._add_container(fleet, chosen)
 
         # ---- timing: exec draw first, then cold-setup draw (RNG parity)
         exec_s = self._service_time(fleet)
@@ -323,10 +517,13 @@ class ClusterSimulator:
         k = fleet.inflight(chosen.cid) + 1
         if k > 1:
             exec_s *= 1.0 + self.contention * (k - 1)
-        if cold:
-            setup = self._jit(chosen.cold_breakdown().total_s)
+        walls: dict = {}
+        if cold or claimed:
+            setup, walls = self._cold_setup(q, fleet, chosen, t)
             start = t + setup
             chosen.ready_at = start
+            if claimed:            # keep the shared pool at standing size
+                self._spawn_pool_sandbox(q, t)
         else:
             # a concurrency > 1 follow-up placed on a still-provisioning
             # container queues until the cold start finishes
@@ -346,13 +543,19 @@ class ClusterSimulator:
         # ---- billing + records (batch wall time amortized per request)
         share = exec_s / b
         cost = billing.invocation_cost(share, fleet.spec.memory_mb)
+        kind = self._cold_kind(walls) if (cold or claimed) else ""
         for req in reqs:
             self.records.append(RequestRecord(
                 rid=req.rid, arrival_s=req.arrival_s, start_exec_s=start,
                 end_s=end, cold=cold, prediction_s=exec_s,
                 exec_s=share if b > 1 else exec_s, cost=cost,
                 container_id=chosen.cid, memory_mb=fleet.spec.memory_mb,
-                tag=req.tag, fn=fleet.name, batch_size=b))
+                tag=req.tag, fn=fleet.name, batch_size=b,
+                cold_kind=kind,
+                provision_s=walls.get(Phase.PROVISION, 0.0),
+                bootstrap_s=walls.get(Phase.BOOTSTRAP, 0.0),
+                load_s=walls.get(Phase.LOAD, 0.0),
+                restore_s=walls.get(Phase.RESTORE, 0.0)))
 
     # ------------------------------------------------------------ throttling
     def _make_room(self, q: EventQueue, fleet: Fleet, t: float,
@@ -371,7 +574,7 @@ class ClusterSimulator:
                    for cid in f.live if f.containers[cid].state == State.WARM]
         if victims:
             _, vcid, vfleet = min(victims)
-            vfleet.evict(vcid)
+            self._evict(vfleet, vcid)
             return True
         ends = [f.earliest_free_s() for f in self.fleets.values()]
         ends = [e for e in ends if e is not None]

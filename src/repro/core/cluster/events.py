@@ -19,6 +19,7 @@ COMPLETE = "complete"          # a container finishes a request (or batch)
 EXPIRE = "expire"              # keep-alive deadline check for a container
 PREWARM_READY = "prewarm_ready"  # a predictively-provisioned container warms
 FLUSH = "flush"                # a batching fleet's max_wait deadline
+PHASE_DONE = "phase_done"      # a container finishes one cold-start phase
 
 
 class EventQueue:
@@ -48,6 +49,16 @@ class RequestRecord:
     ``exec_s`` is the request's billed execution share (for a batch of B the
     batch wall time is amortized B ways); ``prediction_s`` is the wall time
     the model actually ran for (the whole batch for batched requests).
+
+    Requests that paid any setup carry the phase-resolved wall seconds
+    (jittered; they sum to ``start_exec_s - arrival_s`` for an uncontended
+    start): ``provision_s`` / ``bootstrap_s`` / ``load_s`` / ``restore_s``.
+    ``cold_kind`` classifies the start path — ``"full"`` (all phases, the
+    only kind under FullCold), ``"restore"`` (snapshot hit: PROVISION +
+    RESTORE) and ``"cache"`` (package-cache hit: LOAD skipped) are cold
+    starts (``cold=True``); ``"pool"`` (bare-sandbox claim: LOAD only) is
+    a PREWARM start in the OpenWhisk taxonomy, so ``cold=False`` even
+    though ``load_s > 0``; ``""`` means a fully warm start.
     """
     rid: int
     arrival_s: float
@@ -62,6 +73,11 @@ class RequestRecord:
     tag: str = ""
     fn: str = ""
     batch_size: int = 1
+    cold_kind: str = ""
+    provision_s: float = 0.0
+    bootstrap_s: float = 0.0
+    load_s: float = 0.0
+    restore_s: float = 0.0
 
     @property
     def response_s(self) -> float:

@@ -8,6 +8,11 @@ times, the arrival history the scaling policy reads, and (optionally) a
 The ``Router`` maps a workload ``Request`` to a fleet by the request's
 ``fn`` field (empty string routes to the default fleet), which is what lets
 one cluster serve several functions under a shared container cap.
+
+``BarePool`` is the LayeredPool coldstart policy's cluster-shared stock of
+bootstrapped-but-unloaded sandboxes: function-agnostic containers parked in
+lifecycle state BOOTSTRAPPED that any fleet may claim, paying only the LOAD
+phase.
 """
 from __future__ import annotations
 
@@ -86,6 +91,46 @@ class Fleet:
         ends = [e for ends in self.inflight_ends.values() for e in ends]
         ends += self.prewarm_etas
         return min(ends) if ends else None
+
+
+class BarePool:
+    """Cluster-shared stock of bare (bootstrapped, model-less) sandboxes.
+
+    The cluster parks sandboxes here as their PROVISION/BOOTSTRAP phase
+    chains finish; a claim hands the earliest-ready sandbox to a fleet
+    (oldest first, so idle-billing is FIFO-fair) and the caller re-specs it
+    to the claiming fleet's tier.  ``idle_sandbox_s`` accumulates the
+    bare idle time billed by ``repro.core.billing.sandbox_idle_cost``.
+    """
+
+    def __init__(self):
+        self.ready: list[tuple[float, int]] = []     # (ready_at, cid)
+        self.sandboxes: dict[int, Container] = {}    # all unclaimed, by cid
+        self.claims = 0
+        self.idle_sandbox_s = 0.0
+
+    def add(self, c: Container) -> None:
+        self.sandboxes[c.cid] = c
+
+    def park(self, c: Container, t: float) -> None:
+        """A sandbox finished BOOTSTRAP at ``t`` and is now claimable."""
+        self.ready.append((t, c.cid))
+
+    def claim(self, t: float) -> Optional[Container]:
+        """Pop the earliest-ready sandbox, or None if none is ready yet."""
+        if not self.ready:
+            return None
+        self.ready.sort()
+        ready_at, cid = self.ready.pop(0)
+        c = self.sandboxes.pop(cid)
+        self.claims += 1
+        self.idle_sandbox_s += max(0.0, t - ready_at)
+        return c
+
+    def settle(self, t_end: float) -> None:
+        """Account idle time of still-unclaimed ready sandboxes at run end."""
+        for ready_at, _ in self.ready:
+            self.idle_sandbox_s += max(0.0, t_end - ready_at)
 
 
 class Router:

@@ -1,10 +1,32 @@
 """Container lifecycle — the cold/warm mechanics at the heart of the paper.
 
-Cold start anatomy (C1/C4): PROVISION (infrastructure: pull + start the
-container sandbox) -> BOOTSTRAP (language runtime + framework import,
-CPU-bound so tier-dependent) -> LOAD (deployment package read + model
-deserialize, I/O-bound so tier-dependent) -> WARM.  Warm invocations skip all
-three, which is why the paper sees a bimodal latency distribution.
+Cold start anatomy (C1/C4), now an explicit staged state machine:
+
+    PROVISION (infrastructure: pull + start the container sandbox)
+      -> BOOTSTRAP (language runtime + framework import, CPU-bound so
+         tier-dependent)
+      -> LOAD (deployment package read + model deserialize, I/O-bound so
+         tier-dependent)
+      -> WARM.
+
+Warm invocations skip all three, which is why the paper sees a bimodal
+latency distribution.  Each completed phase parks the container in an
+intermediate lifecycle state (PROVISIONED, BOOTSTRAPPED, LOADED); a
+container claimed from an intermediate state only pays the *remaining*
+phases — the substrate every cold-start mitigation policy builds on
+(``repro.core.cluster.policies.ColdStartPolicy``):
+
+  * a LayeredPool sandbox parks at BOOTSTRAPPED and pays only LOAD when
+    claimed;
+  * SnapshotRestore replaces BOOTSTRAP+LOAD with a single cheap RESTORE
+    phase once a function snapshot exists;
+  * PackageCache skips LOAD on a handler cache hit.
+
+The event loop advances a cold-starting container phase-by-phase with
+``phase_done`` events (``repro.core.cluster.events.PHASE_DONE``); under the
+default FullCold policy the phases are charged in one collapsed step for
+bit-parity with the pre-refactor loop, but the per-phase wall times are
+still recorded (they sum exactly to the collapsed total).
 
 The provision phase is dominated by fixed infrastructure work; the paper's
 cold curves fall with memory but "do not follow the warm pattern" because
@@ -22,11 +44,45 @@ from repro.core.function import FunctionSpec
 _ids = itertools.count()
 
 
+class Phase(enum.Enum):
+    """One stage of the cold-start anatomy (in lifecycle order).
+
+    RESTORE is the snapshot path's substitute for BOOTSTRAP + LOAD: it
+    resumes a memory image of an already-bootstrapped, already-loaded
+    process, so completing it marks both as done.
+    """
+    PROVISION = "provision"
+    BOOTSTRAP = "bootstrap"
+    LOAD = "load"
+    RESTORE = "restore"
+
+
+# which lifecycle milestones each phase completes
+_PHASE_COMPLETES = {
+    Phase.PROVISION: (Phase.PROVISION,),
+    Phase.BOOTSTRAP: (Phase.BOOTSTRAP,),
+    Phase.LOAD: (Phase.LOAD,),
+    Phase.RESTORE: (Phase.BOOTSTRAP, Phase.LOAD),
+}
+
+
 class State(enum.Enum):
-    PROVISIONING = "provisioning"
-    WARM = "warm"          # idle, ready to serve
+    PROVISIONING = "provisioning"  # cold-start phases in flight
+    PROVISIONED = "provisioned"    # parked: sandbox up, no runtime
+    BOOTSTRAPPED = "bootstrapped"  # parked: runtime up, no model (bare pool)
+    WARM = "warm"                  # idle, ready to serve
+    LOADED = "warm"                # alias: lifecycle name for WARM
     BUSY = "busy"
     EVICTED = "evicted"
+
+
+# parked state reached when a phase completes and the container is idle
+_PARKED_STATE = {
+    Phase.PROVISION: State.PROVISIONED,
+    Phase.BOOTSTRAP: State.BOOTSTRAPPED,
+    Phase.LOAD: State.LOADED,
+    Phase.RESTORE: State.LOADED,
+}
 
 
 # provision-time model: fixed sandbox work + mild tier dependence (network /
@@ -45,6 +101,11 @@ class ColdStartBreakdown:
     @property
     def total_s(self) -> float:
         return self.provision_s + self.bootstrap_s + self.load_s
+
+    def phase_s(self, phase: Phase) -> float:
+        return {Phase.PROVISION: self.provision_s,
+                Phase.BOOTSTRAP: self.bootstrap_s,
+                Phase.LOAD: self.load_s}[phase]
 
 
 def cold_start_breakdown(spec: FunctionSpec) -> ColdStartBreakdown:
@@ -67,6 +128,36 @@ class Container:
     ready_at: float = 0.0
     last_used_at: float = 0.0
     invocations: int = 0
+    # --- staged lifecycle ------------------------------------------------
+    # milestones completed so far (Phase.PROVISION/BOOTSTRAP/LOAD members)
+    completed: set = dataclasses.field(default_factory=set)
+    # wall seconds actually paid per phase (jittered), keyed by Phase
+    phase_times: dict = dataclasses.field(default_factory=dict)
+    # in-flight phase plan: [(Phase, wall_s, boundary_t)], advanced by
+    # PHASE_DONE events; ``phase_idx`` is the next entry to complete
+    phase_plan: list = dataclasses.field(default_factory=list)
+    phase_idx: int = 0
+    # why this cold-start chain runs: "dispatch" (request-bound),
+    # "prewarm" (scaling policy), or "pool" (bare-sandbox replenishment)
+    role: str = "dispatch"
 
     def cold_breakdown(self) -> ColdStartBreakdown:
         return cold_start_breakdown(self.spec)
+
+    # --------------------------------------------------------- lifecycle
+    def done(self, phase: Phase) -> bool:
+        return phase in self.completed
+
+    def mark_done(self, phase: Phase, wall_s: float) -> None:
+        """Record a completed phase (its jittered wall time accumulates)."""
+        for milestone in _PHASE_COMPLETES[phase]:
+            self.completed.add(milestone)
+        self.phase_times[phase] = self.phase_times.get(phase, 0.0) + wall_s
+
+    def parked_state(self, phase: Phase) -> State:
+        """The idle state a container rests in after completing ``phase``."""
+        return _PARKED_STATE[phase]
+
+    @property
+    def loaded(self) -> bool:
+        return Phase.LOAD in self.completed

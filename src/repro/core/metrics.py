@@ -57,6 +57,36 @@ def summarize(records, *, warm_only: bool = False, cold_only: bool = False,
         total_cost=float(cost.sum()), mean_cost=float(cost.mean()))
 
 
+def phase_breakdown(records, *, drop_tags: tuple = ("prime",)) -> dict:
+    """Phase-resolved cold-start summary (paper C1/C4, now decomposed).
+
+    Means are over requests that paid any setup — cold starts plus
+    bare-pool prewarm starts (``cold_kind="pool"``, which are not colds
+    but do pay LOAD); the ``by_kind`` counts classify each by the path it
+    took (``full`` / ``pool`` / ``restore`` / ``cache``).
+    ``mean_setup_s`` is the mean total setup penalty, i.e. the sum of the
+    per-phase means.
+    """
+    colds = [r for r in records if (r.cold or r.cold_kind)
+             and r.tag not in drop_tags]
+    if not colds:
+        return {"n_cold": 0, "provision_s": 0.0, "bootstrap_s": 0.0,
+                "load_s": 0.0, "restore_s": 0.0, "mean_setup_s": 0.0,
+                "by_kind": {}}
+    n = len(colds)
+    out = {"n_cold": n}
+    for ph in ("provision_s", "bootstrap_s", "load_s", "restore_s"):
+        out[ph] = sum(getattr(r, ph) for r in colds) / n
+    out["mean_setup_s"] = (out["provision_s"] + out["bootstrap_s"]
+                           + out["load_s"] + out["restore_s"])
+    by_kind: dict[str, int] = {}
+    for r in colds:
+        by_kind[r.cold_kind or "full"] = by_kind.get(r.cold_kind or "full",
+                                                     0) + 1
+    out["by_kind"] = by_kind
+    return out
+
+
 def container_seconds(records, keepalive_s: float) -> float:
     """Platform-side resource usage: busy time + idle keep-alive tails —
     the provider-cost side of the keep-warm trade-off (paper §5)."""

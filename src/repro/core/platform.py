@@ -52,8 +52,16 @@ class ServerlessPlatform:
     * ``scaling`` — ``None``/``"lambda"`` (scale-out on demand only) |
       ``"predictive"`` (Knative-style warm-pool sizing; tune via
       ``PredictiveWarmPool(Autoscaler(window_s, margin, min_pool))`` — the
-      ``diurnal`` / ``flash_crowd`` scenarios' expected winner), or an
-      instance.
+      ``diurnal`` scenario's expected winner), or an instance.
+    * ``coldstart`` — ``None``/``"full"`` (every cold pays the whole
+      PROVISION -> BOOTSTRAP -> LOAD anatomy) | ``"snapshot"``
+      (checkpoint/restore: later colds pay PROVISION + a cheap RESTORE;
+      half of ``flash_crowd``'s expected winner) | ``"layered"``
+      (shared bootstrapped-sandbox pool: claims pay LOAD only; composes
+      with ``max_containers`` in ``multi_function``) | ``"package_cache"``
+      (handler-keyed package cache: LOAD skipped on a hit), or an
+      instance.  Stateful mitigation policies (snapshots written, cached
+      packages) are deep-copied per invocation like ``keepalive``.
     * ``concurrency`` — in-flight requests per container (default 1);
       above 1, requests slow each other by the cluster's contention
       factor.
@@ -70,7 +78,7 @@ class ServerlessPlatform:
     def __init__(self, *, seed: int = 0, keepalive_s: float = 480.0,
                  use_fallback_calibration: bool = False,
                  placement="mru", keepalive=None, scaling=None,
-                 concurrency: int = 1,
+                 coldstart=None, concurrency: int = 1,
                  batching: Union[BatchingConfig, dict, None] = None,
                  max_containers: int = 0):
         self.seed = seed
@@ -78,6 +86,7 @@ class ServerlessPlatform:
         self.placement = placement
         self.keepalive = keepalive
         self.scaling = scaling
+        self.coldstart = coldstart
         self.concurrency = concurrency
         self.batching = batching
         self.max_containers = max_containers
@@ -106,6 +115,7 @@ class ServerlessPlatform:
                      else copy.deepcopy(self.keepalive))
         kw = dict(placement=self.placement, keepalive=keepalive,
                   scaling=copy.deepcopy(self.scaling),
+                  coldstart=copy.deepcopy(self.coldstart),
                   concurrency=self.concurrency,
                   batching=self.batching, max_containers=self.max_containers,
                   keepalive_s=self.keepalive_s,

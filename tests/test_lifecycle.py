@@ -1,0 +1,312 @@
+"""Phase-aware container lifecycle + ColdStartPolicy axis.
+
+Covers the PR-3 tentpole contracts: per-phase durations sum to the old
+collapsed total, intermediate-state claims pay only the remaining phases,
+snapshot amortization kicks in on the second cold, the bare pool's
+prewarm-start taxonomy, the O(1) active counter, the repo-root calibration
+anchor, and a golden pin that FullCold + the default stack still reproduces
+the PR-1 bit-parity digests.
+"""
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+
+import pytest
+
+import repro.core.container as container_mod
+from repro.core import billing, metrics
+from repro.core.cluster import (ClusterSimulator, FullCold, LayeredPool,
+                                PackageCache, PredictiveWarmPool,
+                                SnapshotRestore)
+from repro.core.container import (ColdStartBreakdown, Container, Phase, State,
+                                  cold_start_breakdown)
+from repro.core.function import FunctionSpec, Handler
+from repro.core.workload import Request, cold_probe, poisson
+
+H = Handler(name="t", base_cpu_seconds=0.2, bootstrap_cpu_seconds=1.0,
+            package_mb=45.0, peak_memory_mb=100.0)
+
+
+def _spec(m=1024, name="t"):
+    h = H if name == "t" else dataclasses.replace(H, name=name)
+    return FunctionSpec(handler=h, memory_mb=m)
+
+
+def _reset_cids():
+    container_mod._ids = itertools.count()
+
+
+# ----------------------------------------------------------- phase anatomy
+def test_phase_durations_sum_to_breakdown_total():
+    """jitter=0: the per-phase record fields reproduce the analytic
+    ColdStartBreakdown exactly, and they sum to the old collapsed total."""
+    spec = _spec()
+    bd = cold_start_breakdown(spec)
+    sim = ClusterSimulator(spec, seed=0, jitter=0.0)
+    recs = sim.run([Request(0, 0.0)])
+    r = recs[0]
+    assert r.cold and r.cold_kind == "full"
+    assert r.provision_s == pytest.approx(bd.provision_s, rel=1e-12)
+    assert r.bootstrap_s == pytest.approx(bd.bootstrap_s, rel=1e-12)
+    assert r.load_s == pytest.approx(bd.load_s, rel=1e-12)
+    assert (r.provision_s + r.bootstrap_s + r.load_s
+            == pytest.approx(bd.total_s, rel=1e-12))
+
+
+def test_phase_durations_sum_to_jittered_setup():
+    """With jitter on, phases sum to the actually-paid setup wall time
+    (start - arrival) for every cold dispatch, under every policy."""
+    spec = _spec()
+    for cs in ("full", "snapshot", "layered", "package_cache"):
+        sim = ClusterSimulator(spec, coldstart=cs, seed=3, jitter=0.1,
+                               keepalive_s=10.0)
+        recs = sim.run(cold_probe(n=6))
+        paid = [r for r in recs if r.cold_kind]
+        assert paid, cs
+        for r in paid:
+            setup = r.provision_s + r.bootstrap_s + r.load_s + r.restore_s
+            assert setup == pytest.approx(r.start_exec_s - r.arrival_s,
+                                          rel=1e-9), cs
+
+
+def test_warm_requests_pay_no_phases():
+    spec = _spec()
+    sim = ClusterSimulator(spec, seed=0, jitter=0.0)
+    recs = sim.run([Request(0, 0.0), Request(1, 5.0)])
+    warm = recs[1]
+    assert not warm.cold and warm.cold_kind == ""
+    assert warm.provision_s == warm.bootstrap_s == warm.load_s \
+        == warm.restore_s == 0.0
+
+
+def test_plan_charges_only_remaining_phases():
+    """The state-machine contract: a container parked mid-lifecycle owes
+    only the phases it has not completed."""
+    spec = _spec()
+    bd = cold_start_breakdown(spec)
+    c = Container(spec, created_at=0.0)
+    pol = FullCold()
+    assert [ph for ph, _ in pol.plan(spec, c)] == [Phase.PROVISION,
+                                                   Phase.BOOTSTRAP,
+                                                   Phase.LOAD]
+    c.mark_done(Phase.PROVISION, bd.provision_s)
+    c.mark_done(Phase.BOOTSTRAP, bd.bootstrap_s)
+    plan = pol.plan(spec, c)
+    assert plan == [(Phase.LOAD, bd.load_s)]
+    assert c.parked_state(Phase.BOOTSTRAP) is State.BOOTSTRAPPED
+    assert State.LOADED is State.WARM          # lifecycle alias
+
+
+# ------------------------------------------------------------- golden pin
+_GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__), "data",
+                                      "simulator_golden.json")))
+
+
+def _canon(records):
+    return [[r.rid, float(r.arrival_s).hex(), float(r.start_exec_s).hex(),
+             float(r.end_s).hex(), r.cold, float(r.prediction_s).hex(),
+             float(r.exec_s).hex(), float(r.cost).hex(), r.container_id,
+             r.memory_mb, r.tag] for r in records]
+
+
+def test_fullcold_default_stack_reproduces_pr1_goldens():
+    """Explicit coldstart="full" (and the FullCold instance) both stay
+    bit-identical to the pre-refactor Simulator records."""
+    for cs in ("full", FullCold()):
+        _reset_cids()
+        recs = ClusterSimulator(_spec(), coldstart=cs, seed=0).run(
+            cold_probe())
+        rows = _canon(recs)
+        digest = hashlib.sha256(
+            json.dumps(rows, sort_keys=True).encode()).hexdigest()
+        assert digest == _GOLDEN["cold_probe"]["sha256"]
+
+
+# ------------------------------------------------------- snapshot restore
+def test_snapshot_amortizes_on_second_cold():
+    spec = _spec()
+    bd = cold_start_breakdown(spec)
+    sim = ClusterSimulator(spec, coldstart=SnapshotRestore(), seed=0,
+                           jitter=0.0, keepalive_s=10.0)
+    recs = sim.run(cold_probe(n=3))
+    first, second, third = recs
+    assert first.cold_kind == "full"
+    assert first.restore_s == 0.0
+    for r in (second, third):
+        assert r.cold and r.cold_kind == "restore"
+        assert r.bootstrap_s == r.load_s == 0.0
+        assert r.restore_s == pytest.approx(
+            max(0.1, 0.2 * (bd.bootstrap_s + bd.load_s)), rel=1e-12)
+        # amortization: restore colds are strictly cheaper than full colds
+        assert (r.start_exec_s - r.arrival_s
+                < first.start_exec_s - first.arrival_s)
+    # snapshot storage surfaces as platform-side spend
+    assert sim.mitigation_cost > 0.0
+    assert sim.coldstart.snapshots()[0][0] == spec.name
+
+
+def test_snapshot_written_only_after_first_load_completes():
+    """Two near-simultaneous colds both pay full price — the snapshot only
+    exists once the first LOAD has actually finished."""
+    spec = _spec()
+    sim = ClusterSimulator(spec, coldstart=SnapshotRestore(), seed=0,
+                           jitter=0.0)
+    recs = sim.run([Request(0, 0.0), Request(1, 0.1)])
+    assert [r.cold_kind for r in recs] == ["full", "full"]
+
+
+# ------------------------------------------------------------- bare pool
+def test_pool_claim_pays_only_load_and_is_prewarm_start():
+    spec = _spec()
+    bd = cold_start_breakdown(spec)
+    sim = ClusterSimulator(spec, coldstart=LayeredPool(pool_size=2), seed=0,
+                           jitter=0.0, keepalive_s=10.0)
+    recs = sim.run(cold_probe(n=3))
+    first, second, third = recs
+    assert first.cold and first.cold_kind == "full"   # pool not ready at t=0
+    for r in (second, third):
+        assert not r.cold                  # OpenWhisk prewarm-start taxonomy
+        assert r.cold_kind == "pool"
+        assert r.provision_s == r.bootstrap_s == 0.0
+        assert r.load_s == pytest.approx(bd.load_s, rel=1e-12)
+        assert (r.start_exec_s - r.arrival_s
+                == pytest.approx(bd.load_s, rel=1e-12))
+    assert sim.pool.claims == 2
+    assert sim.cold_starts == 1            # claims are not cold starts
+    assert sim.mitigation_cost > 0.0       # pool idle is billed
+
+
+def test_pool_sandboxes_walk_the_parked_states():
+    """PHASE_DONE events drive bare sandboxes PROVISIONED -> BOOTSTRAPPED;
+    unclaimed sandboxes end the run parked and fully bootstrapped."""
+    spec = _spec()
+    sim = ClusterSimulator(spec, coldstart=LayeredPool(pool_size=3), seed=0,
+                           jitter=0.0)
+    sim.run([Request(0, 0.0)])
+    assert len(sim.pool.sandboxes) == 3
+    for c in sim.pool.sandboxes.values():
+        assert c.state is State.BOOTSTRAPPED
+        assert c.done(Phase.PROVISION) and c.done(Phase.BOOTSTRAP)
+        assert not c.done(Phase.LOAD)
+        assert c.phase_times[Phase.PROVISION] > 0.0
+
+
+def test_pool_claims_respect_shared_cap():
+    spec = _spec()
+    sim = ClusterSimulator(spec, coldstart=LayeredPool(pool_size=4), seed=0,
+                           jitter=0.0, max_containers=2)
+    recs = sim.run([Request(i, 10.0 + 0.01 * i) for i in range(8)])
+    assert len(recs) == 8
+    # claimed + cold containers never exceed the cap (bare sandboxes sit
+    # outside it, but a claim counts the moment it joins a fleet)
+    assert len({r.container_id for r in recs}) <= 2
+    assert sim._active_n <= 2
+
+
+def test_pool_replenishes_after_claims():
+    spec = _spec()
+    sim = ClusterSimulator(spec, coldstart=LayeredPool(pool_size=2), seed=0,
+                           jitter=0.0, keepalive_s=5.0)
+    sim.run(cold_probe(n=6))
+    assert sim.pool.claims >= 4
+    assert len(sim.pool.sandboxes) == 2    # standing size restored
+
+
+# ---------------------------------------------------------- package cache
+def test_package_cache_skips_load_on_hit():
+    spec = _spec()
+    bd = cold_start_breakdown(spec)
+    sim = ClusterSimulator(spec, coldstart=PackageCache(), seed=0,
+                           jitter=0.0, keepalive_s=10.0)
+    recs = sim.run(cold_probe(n=3))
+    assert recs[0].cold_kind == "full"
+    for r in recs[1:]:
+        assert r.cold and r.cold_kind == "cache"
+        assert r.load_s == 0.0
+        assert (r.start_exec_s - r.arrival_s
+                == pytest.approx(bd.provision_s + bd.bootstrap_s, rel=1e-12))
+
+
+def test_package_cache_is_per_handler():
+    sa, sb = _spec(1024, "a"), _spec(512, "b")
+    sim = ClusterSimulator([sa, sb], coldstart=PackageCache(), seed=0,
+                           jitter=0.0)
+    recs = sim.run([Request(0, 0.0, fn=sa.name), Request(1, 1.0, fn=sb.name)])
+    # different handlers: b's first cold is NOT a cache hit
+    assert [r.cold_kind for r in recs] == ["full", "full"]
+
+
+# ----------------------------------------------------- prewarms, phased
+def test_phased_prewarms_reach_warm_and_write_snapshots():
+    spec = _spec()
+    sim = ClusterSimulator(spec, coldstart=SnapshotRestore(),
+                           scaling=PredictiveWarmPool(), seed=0, jitter=0.0)
+    sim.run(poisson(5.0, 30.0, seed=1))
+    assert sim.prewarms > 0
+    assert not any(f.pending_prewarms for f in sim.fleets.values())
+    assert sim.coldstart.snapshots()          # a prewarm LOAD wrote one
+
+
+# ------------------------------------------------------ counters, metrics
+def test_active_counter_matches_live_sets():
+    spec = _spec()
+    for kw in ({}, {"max_containers": 2},
+               {"coldstart": "layered"},
+               {"scaling": PredictiveWarmPool(), "max_containers": 3}):
+        sim = ClusterSimulator(spec, seed=1, **kw)
+        sim.run(poisson(0.05, 5000.0, seed=2))
+        assert sim._active_n == sum(len(f.live) for f in sim.fleets.values())
+
+
+def test_phase_breakdown_metric():
+    spec = _spec()
+    sim = ClusterSimulator(spec, coldstart=LayeredPool(pool_size=1), seed=0,
+                           jitter=0.0, keepalive_s=10.0)
+    recs = sim.run(cold_probe(n=4))
+    pb = metrics.phase_breakdown(recs)
+    assert pb["n_cold"] == len([r for r in recs if r.cold_kind])
+    assert pb["by_kind"]["full"] >= 1 and pb["by_kind"]["pool"] >= 1
+    assert pb["mean_setup_s"] == pytest.approx(
+        pb["provision_s"] + pb["bootstrap_s"] + pb["load_s"]
+        + pb["restore_s"])
+
+
+def test_mitigation_billing_helpers():
+    assert billing.snapshot_storage_cost(1024.0,
+                                         billing.SECONDS_PER_MONTH) \
+        == pytest.approx(billing.SNAPSHOT_GB_MONTH_PRICE)
+    assert billing.sandbox_idle_cost(0.0) == 0.0
+    hour = billing.sandbox_idle_cost(3600.0)
+    assert hour == pytest.approx(36000 * billing.price_per_100ms(128))
+
+
+# --------------------------------------------------------- calibration fix
+def test_calibration_path_anchored_to_repo_root(monkeypatch, tmp_path):
+    from repro.core import calibration
+    monkeypatch.delenv("REPRO_CALIBRATION", raising=False)
+    p = calibration.default_cal_path()
+    assert os.path.isabs(p)
+    assert p.endswith(os.path.join("artifacts", "calibration.json"))
+    monkeypatch.chdir(tmp_path)            # cwd must not matter
+    assert calibration.default_cal_path() == p
+
+
+def test_calibration_env_override_read_at_call_time(monkeypatch, tmp_path):
+    from repro.core import calibration
+    fake = tmp_path / "cal.json"
+    fake.write_text(json.dumps({"resnet18": {"base_cpu_seconds": 0.123,
+                                             "first_call_seconds": 1.0}}))
+    monkeypatch.setenv("REPRO_CALIBRATION", str(fake))
+    out = calibration.calibrate()          # must read, not re-measure
+    assert out["resnet18"]["base_cpu_seconds"] == 0.123
+
+
+# ------------------------------------------------------------ bench smoke
+def test_simloop_bench_smoke():
+    from benchmarks.simloop_bench import run_bench
+    r = run_bench(500)
+    assert r["n_records"] == r["n_requests"] > 0
+    assert r["events"] >= 2 * r["n_requests"]
+    assert r["events_per_sec"] > 0
