@@ -19,12 +19,22 @@ from benchmarks.scenario_suite import run_combo
 from repro.core.cluster import BatchingConfig
 from repro.core.platform import ServerlessPlatform
 from repro.core.scenarios import SPARSE_DURATION_S, SPARSE_RATE_RPS
+from repro.core.stack import PolicyStack
 from repro.core.workload import poisson
 
 # sparse enough that a 480 s TTL still leaks colds: P(gap > 480) ~ 15%
 # (shared with the suite's ``sparse`` scenario, pinned for bit-compat)
 RATE_RPS = SPARSE_RATE_RPS
 DURATION_S = SPARSE_DURATION_S
+
+# the classic axes (the full suite adds scaling and coldstart); expanded
+# with PolicyStack.grid in the classic nested-loop order, batching fastest
+CLASSIC_AXES = {
+    "placement": ("mru", "lru"),
+    "keepalive": ("fixed", "adaptive"),
+    "concurrency": (1, 4),
+    "batching": (None, BatchingConfig(max_batch=4, max_wait_s=0.5)),
+}
 
 
 def sweep_results(plat: ServerlessPlatform = None, model: str = "resnet18",
@@ -36,30 +46,21 @@ def sweep_results(plat: ServerlessPlatform = None, model: str = "resnet18",
     spec = plat.deploy_paper_model(model, mem)
     wl = poisson(RATE_RPS, DURATION_S, seed=5)
 
-    combos = []
-    for placement in ("mru", "lru"):
-        for keepalive in ("fixed", "adaptive"):
-            for concurrency in (1, 4):
-                for batching in (None, BatchingConfig(max_batch=4,
-                                                      max_wait_s=0.5)):
-                    combos.append((placement, keepalive, concurrency,
-                                   batching))
-
     rows, lines = [], [
         f"# Policy sweep ({model}@{mem}MB, poisson {RATE_RPS}/s x "
         f"{DURATION_S:.0f}s): placement/keepalive/conc/batch -> "
         f"cold_rate, p95_s, cost/1k"]
     results = {}
-    for placement, keepalive, concurrency, batching in combos:
-        r = run_combo([spec], wl, placement=placement, keepalive=keepalive,
-                      concurrency=concurrency, batching=batching)
-        key = (placement, keepalive, concurrency, bool(batching))
-        results[key] = r
+    for stack in PolicyStack.grid(CLASSIC_AXES):
+        r = run_combo([spec], wl, stack)
+        placement, keepalive = stack.placement, stack.keepalive.kind
+        concurrency, batched = stack.concurrency, stack.batching is not None
+        results[(placement, keepalive, concurrency, batched)] = r
         tag = (f"policy/{placement}-{keepalive}-c{concurrency}"
-               f"{'-batch' if batching else ''}")
+               f"{'-batch' if batched else ''}")
         rows.append((tag, r["p95_s"] * 1e6, r["cold_rate"]))
         lines.append(f"  {placement:4s} {keepalive:8s} conc={concurrency} "
-                     f"batch={'y' if batching else 'n'}  "
+                     f"batch={'y' if batched else 'n'}  "
                      f"cold={r['cold_rate']:6.2%}  p95={r['p95_s']:6.2f}s  "
                      f"$/1k={r['cost_per_1k']:.4f}")
 

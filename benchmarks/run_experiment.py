@@ -1,0 +1,66 @@
+"""Run serialized ExperimentSpecs: one JSON artifact -> one reproducible
+report.
+
+Each spec file is a ``repro.core.stack.ExperimentSpec``: a scenario name,
+a policy stack (either a ``POLICY_STACKS`` name or a full nested stack
+dict), the cluster seed, the trace scale, and optionally a ``versus``
+stack to grade against with the suite's verdict rule (win on both cold
+rate and p95).  Running a spec writes
+``<out-dir>/<spec-stem>_report.json`` containing the canonicalized spec
+(so a by-name stack is expanded to its full serialized form) plus the
+structured result — everything needed to re-run or audit the number.
+
+Run:
+
+    PYTHONPATH=src python -m benchmarks.run_experiment \
+        examples/specs/sparse_adaptive_tiny.json
+    PYTHONPATH=src python -m benchmarks.run_experiment \
+        examples/specs/*.json --out-dir artifacts/experiments
+
+Exit status is 1 if any spec's ``versus`` verdict is NO-WIN (the suite's
+gate; SLA status is reported but not gating — tiny smoke traces routinely
+miss the full-scale SLA while still showing the policy win).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core.stack import ExperimentSpec
+
+
+def run_spec_file(path: str, out_dir: str) -> dict:
+    """Run one spec file; writes the report JSON and returns
+    ``{"spec", "result", "report_path"}``."""
+    spec = ExperimentSpec.from_file(path)
+    result = spec.run()
+    os.makedirs(out_dir, exist_ok=True)
+    stem = os.path.splitext(os.path.basename(path))[0]
+    report_path = os.path.join(out_dir, f"{stem}_report.json")
+    with open(report_path, "w") as f:
+        json.dump(result.to_dict(), f, indent=1)
+    return {"spec": spec, "result": result, "report_path": report_path}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("specs", nargs="+", help="ExperimentSpec JSON file(s)")
+    ap.add_argument("--out-dir", default="artifacts/experiments",
+                    help="report directory (one JSON per spec)")
+    args = ap.parse_args(argv)
+
+    ok = True
+    for path in args.specs:
+        out = run_spec_file(path, args.out_dir)
+        r = out["result"]
+        print(f"[run_experiment] {os.path.basename(path)} -> "
+              f"{out['report_path']}")
+        print(f"  {r.summary_line()}")
+        if r.verdict is not None and not r.verdict["win"]:
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,18 +27,18 @@ Run:
 from __future__ import annotations
 
 import argparse
-import copy
 import csv
-import itertools
 import os
 
-from repro.core import metrics, scenarios
-from repro.core.cluster import BatchingConfig, ClusterSimulator
+from repro.core import scenarios
+from repro.core.cluster import BatchingConfig
 from repro.core.platform import ServerlessPlatform
 from repro.core.scenarios import POLICY_STACKS, Scenario
+from repro.core.stack import PolicyStack, run_stack
 
-# The sweep axes.  Batching settings match POLICY_STACKS["batching"] so the
-# expected-winner verdict reads its numbers straight out of the sweep.
+# The sweep axes (expanded by ``PolicyStack.grid``).  Batching settings
+# match POLICY_STACKS["batching"] so the expected-winner verdict reads its
+# numbers straight out of the sweep.
 AXES = {
     "placement": ("mru", "lru"),
     "keepalive": ("fixed", "adaptive"),
@@ -54,64 +54,19 @@ CSV_FIELDS = ("scenario", "placement", "keepalive", "scaling", "coldstart",
               "evictions", "prewarms")
 
 
-def _combo_key(combo: dict) -> tuple:
-    return (combo["placement"], combo["keepalive"], combo["scaling"],
-            combo["coldstart"], combo["concurrency"],
-            bool(combo["batching"]))
-
-
-def _stack_key(stack_name: str) -> tuple:
-    return _combo_key(POLICY_STACKS[stack_name])
-
-
-def run_combo(specs, trace, *, placement="mru", keepalive="fixed",
-              scaling="lambda", coldstart="full", concurrency=1,
-              batching=None, max_containers=0, seed=0, sla=None,
+def run_combo(specs, trace, stack: PolicyStack, *, seed=0, sla=None,
               scenario: Scenario | None = None) -> dict:
-    """Run one policy combo on one trace and summarize it.
+    """Run one policy stack on one trace and summarize it (the suite-facing
+    name for ``repro.core.stack.run_stack``).
 
-    Stateful policies are freshly constructed per call (scenario-tuned
-    factories or registry names), so combos never share histogram /
-    autoscaler / snapshot state.  With ``scaling="lambda"``,
-    ``coldstart="full"`` and ``max_containers=0`` this is exactly the
-    classic ``policy_sweep`` run (bit-compatible).
-
-    ``cost_per_1k`` folds in the platform-side mitigation spend (snapshot
-    storage, bare-pool idle — zero under ``full``), also broken out as
-    ``mitigation_per_1k``.
+    ``stack.materialize()`` constructs fresh policy instances per call, so
+    combos never share histogram / autoscaler / snapshot state; a
+    ``scenario`` applies its tuned axis configs and shared container cap
+    via ``Scenario.tune``.  The baseline stack is exactly the classic
+    ``policy_sweep`` run (bit-compatible).
     """
-    if scenario is not None:
-        if keepalive == "adaptive" and scenario.adaptive is not None:
-            keepalive = scenario.adaptive()
-        if scaling == "predictive" and scenario.predictive is not None:
-            scaling = scenario.predictive()
-        if coldstart != "full" and scenario.coldstart is not None:
-            tuned = scenario.coldstart()
-            if tuned.name == coldstart:
-                coldstart = tuned
-    sim = ClusterSimulator(specs, seed=seed, placement=placement,
-                           keepalive=copy.deepcopy(keepalive),
-                           scaling=copy.deepcopy(scaling),
-                           coldstart=copy.deepcopy(coldstart),
-                           concurrency=concurrency, batching=batching,
-                           max_containers=max_containers)
-    recs = sim.run(list(trace))
-    s = metrics.summarize(recs)
-    mit_per_1k = sim.mitigation_cost / max(s.n, 1) * 1000.0
-    row = {"n": s.n,
-           "cold_rate": s.n_cold / max(s.n, 1),
-           "p50_s": s.p50_s, "p95_s": s.p95_s, "p99_s": s.p99_s,
-           "cost_per_1k": (s.total_cost / max(s.n, 1) * 1000.0
-                           + mit_per_1k),
-           "mitigation_per_1k": mit_per_1k,
-           "evictions": sim.evictions, "prewarms": sim.prewarms}
-    if sla is not None:
-        ev = sla.evaluate([r for r in recs if r.tag != "prime"])
-        row["sla"] = ev["sla"]
-        row["sla_ok"] = ev["ok"]
-        row["sla_violations"] = sorted(k for k, v in ev["violations"].items()
-                                       if v)
-    return row
+    return run_stack(specs, trace, stack, seed=seed, sla=sla,
+                     scenario=scenario)
 
 
 def run_scenario(scenario: Scenario, *, scale: float = 1.0,
@@ -119,24 +74,24 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
                  axes: dict = AXES) -> dict:
     """Sweep the policy cross-product on one scenario.
 
-    Returns ``{"scenario", "n_requests", "rows": {combo_key: row},
+    Returns ``{"scenario", "n_requests", "rows": {PolicyStack: row},
     "verdict": {...}}`` where the verdict compares the scenario's
     ``expected_winner`` stack against ``baseline`` on cold rate and p95.
+    Row keys are the canonical un-tuned stacks from ``PolicyStack.grid``
+    (tuning is applied at run time), so every ``POLICY_STACKS`` entry
+    indexes its sweep row directly.
     """
     platform = platform or ServerlessPlatform(seed=0,
                                               use_fallback_calibration=True)
     specs = scenario.deploy(platform)
     trace = scenario.build_trace([s.name for s in specs], scale=scale)
 
-    rows = {}
-    for values in itertools.product(*axes.values()):
-        combo = dict(zip(axes.keys(), values))
-        rows[_combo_key(combo)] = run_combo(
-            specs, trace, max_containers=scenario.max_containers,
-            sla=scenario.sla, scenario=scenario, **combo)
+    rows = {stack: run_combo(specs, trace, stack, sla=scenario.sla,
+                             scenario=scenario)
+            for stack in PolicyStack.grid(axes)}
 
-    base = rows[_stack_key("baseline")]
-    winner = rows[_stack_key(scenario.expected_winner)]
+    base = rows[POLICY_STACKS["baseline"]]
+    winner = rows[POLICY_STACKS[scenario.expected_winner]]
     verdict = {
         "expected_winner": scenario.expected_winner,
         "baseline": base, "winner": winner,
@@ -146,7 +101,7 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
     if scenario.rival:
         # the mitigation grade: the winner must also beat the best
         # pre-mitigation stack on cold-start rate, not just the baseline
-        rival = rows[_stack_key(scenario.rival)]
+        rival = rows[POLICY_STACKS[scenario.rival]]
         verdict["rival"] = scenario.rival
         verdict["rival_row"] = rival
         verdict["beats_rival_cold"] = \
@@ -161,9 +116,16 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
 
 
 # ------------------------------------------------------------------ reporting
-def _fmt_combo(key: tuple) -> tuple:
-    p, k, s, cs, c, b = key
+def _fmt_combo(stack: PolicyStack) -> tuple:
+    p, k, s, cs, c, b = stack.axes_key()
     return p, k, s, cs, str(c), ("y" if b else "n")
+
+
+def _sorted_rows(rows: dict) -> list:
+    """Report order: canonical axis order (placement, keepalive kind,
+    scaling kind, coldstart kind, concurrency, batched) — byte-compatible
+    with the pre-PolicyStack tuple-key sort."""
+    return sorted(rows, key=PolicyStack.axes_key)
 
 
 def scenario_markdown(result: dict) -> str:
@@ -179,7 +141,7 @@ def scenario_markdown(result: dict) -> str:
              "| cold | p50 s | p95 s | p99 s | $/1k | mit$/1k | SLA "
              "| evict | prewarm |",
              "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
-    for key in sorted(result["rows"]):
+    for key in _sorted_rows(result["rows"]):
         r = result["rows"][key]
         p, k, s, cs, c, b = _fmt_combo(key)
         sla_cell = ("ok" if r["sla_ok"]
@@ -222,7 +184,7 @@ def suite_markdown(results: list) -> str:
 def suite_csv_rows(results: list) -> list:
     out = []
     for res in results:
-        for key in sorted(res["rows"]):
+        for key in _sorted_rows(res["rows"]):
             r = res["rows"][key]
             p, k, s, cs, c, b = _fmt_combo(key)
             out.append({"scenario": res["scenario"], "placement": p,

@@ -14,6 +14,11 @@ Run:
     PYTHONPATH=src python -m benchmarks.simloop_bench --tiny      # CI smoke
     PYTHONPATH=src python -m benchmarks.simloop_bench -n 200000 \
         --out artifacts/BENCH_simloop.json
+    PYTHONPATH=src python -m benchmarks.simloop_bench --stack adaptive
+
+``--stack`` names any ``POLICY_STACKS`` entry, so the event-loop cost of a
+non-default policy stack (extra EXPIRE re-checks, PHASE_DONE chains, FLUSH
+events) is measurable with the same harness.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ import time
 
 from repro.core.cluster import ClusterSimulator
 from repro.core.function import FunctionSpec, Handler
+from repro.core.stack import PolicyStack
 from repro.core.workload import poisson
 
 # sparse regime: mean gap 250 s vs the 480 s TTL, so a steady fraction of
@@ -36,13 +42,16 @@ HANDLER = Handler(name="bench", base_cpu_seconds=0.2,
                   peak_memory_mb=229.0)
 
 
-def run_bench(n_requests: int, *, seed: int = 0) -> dict:
-    """Time one default-stack run serving ``n_requests``; returns the
-    result row (wall seconds, events/sec, requests/sec)."""
+def run_bench(n_requests: int, *, seed: int = 0,
+              stack: PolicyStack | None = None) -> dict:
+    """Time one run serving ``n_requests`` under ``stack`` (default: the
+    baseline stack, bit-identical to the legacy default kwargs); returns
+    the result row (wall seconds, events/sec, requests/sec)."""
     spec = FunctionSpec(handler=HANDLER, memory_mb=1024)
     duration_s = n_requests / RATE_RPS
     trace = poisson(RATE_RPS, duration_s, seed=seed)
-    sim = ClusterSimulator(spec, seed=seed)
+    sim = ClusterSimulator(spec, seed=seed,
+                           stack=stack if stack is not None else PolicyStack())
     t0 = time.perf_counter()
     records = sim.run(trace)
     wall_s = time.perf_counter() - t0
@@ -64,13 +73,29 @@ def main(argv=None) -> int:
     ap.add_argument("--tiny", action="store_true",
                     help=f"CI smoke size ({TINY_N} requests)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="artifacts/BENCH_simloop.json",
-                    help="result JSON path")
+    ap.add_argument("--stack", default="baseline",
+                    help="POLICY_STACKS name to benchmark (default "
+                         "baseline)")
+    ap.add_argument("--out", default=None,
+                    help="result JSON path (default "
+                         "artifacts/BENCH_simloop.json; non-baseline "
+                         "stacks get BENCH_simloop_<stack>.json so they "
+                         "never clobber the baseline perf trajectory)")
     args = ap.parse_args(argv)
+    if args.out is None:
+        suffix = "" if args.stack == "baseline" else f"_{args.stack}"
+        args.out = f"artifacts/BENCH_simloop{suffix}.json"
 
+    from repro.core.scenarios import POLICY_STACKS
+    try:
+        stack = POLICY_STACKS[args.stack]
+    except KeyError:
+        ap.error(f"unknown stack {args.stack!r}; "
+                 f"known: {sorted(POLICY_STACKS)}")
     n = TINY_N if args.tiny else args.n_requests
-    result = run_bench(n, seed=args.seed)
+    result = run_bench(n, seed=args.seed, stack=stack)
     result["tiny"] = bool(args.tiny)
+    result["stack"] = args.stack
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

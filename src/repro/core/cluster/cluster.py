@@ -52,6 +52,16 @@ REQUEUE = "requeue"         # throttled arrival re-entering the loop
 BATCH_RETRY = "batch_retry"  # throttled formed batch retrying as a unit
 _ARRIVAL_HISTORY_S = ARRIVAL_HISTORY_S  # arrival history fleets retain
 
+# sentinel distinguishing "axis kwarg omitted" from an explicitly passed
+# default, so the stack=-conflict guard sees every explicit argument
+_UNSET = object()
+# the legacy per-axis kwarg defaults — the single table the platform shim
+# and PolicyStack.from_kwargs mirror (tests pin the shim equivalence)
+AXIS_DEFAULTS = {"placement": "mru", "keepalive": None, "scaling": None,
+                 "coldstart": None, "concurrency": 1, "batching": None,
+                 "max_containers": 0}
+_AXIS_DEFAULTS = AXIS_DEFAULTS
+
 
 class ClusterSimulator:
     """Multi-function serverless cluster with pluggable scheduling policies.
@@ -60,10 +70,20 @@ class ClusterSimulator:
     ----------
     specs: one FunctionSpec, a list of them, or ``{name: spec}``.  Requests
         route by ``Request.fn`` (empty -> the first/default fleet).
-    placement / keepalive / scaling / coldstart: policy instances or
-        registry names (``"mru"|"lru"|"least_loaded"``,
-        ``"fixed"|"adaptive"``, ``"lambda"|"predictive"``,
-        ``"full"|"snapshot"|"layered"|"package_cache"``).
+    stack: a ``repro.core.stack.PolicyStack`` — the preferred, serializable
+        way to configure every policy axis at once.  ``stack.materialize()``
+        builds fresh policy instances, so two simulators constructed from
+        the same stack never share mutable policy state.  The stack owns
+        every policy axis, so combining it with any per-axis kwarg below
+        (or with ``keepalive_s``) raises — derive a variant with
+        ``stack.with_(...)`` instead.
+    placement / keepalive / scaling / coldstart: the legacy per-axis
+        surface — policy instances or registry names
+        (``"mru"|"lru"|"least_loaded"``, ``"fixed"|"adaptive"``,
+        ``"lambda"|"predictive"``,
+        ``"full"|"snapshot"|"layered"|"package_cache"``).  Instances are
+        used as-is (the escape hatch for hand-written policy subclasses a
+        stack cannot express); state isolation is then the caller's job.
     concurrency: in-flight requests a single container may hold; requests
         beyond the first slow each other down by ``contention`` each.
     batching: a ``BatchingConfig`` applied to every fleet, or a
@@ -72,11 +92,46 @@ class ClusterSimulator:
     """
 
     def __init__(self, specs: Union[FunctionSpec, list, dict], *,
-                 placement="mru", keepalive=None, scaling=None,
-                 coldstart=None, keepalive_s: float = 480.0, seed: int = 0,
-                 jitter: float = 0.03, max_containers: int = 0,
-                 concurrency: int = 1, contention: float = 0.3,
-                 batching: Union[BatchingConfig, dict, None] = None):
+                 stack=None,
+                 placement=_UNSET, keepalive=_UNSET, scaling=_UNSET,
+                 coldstart=_UNSET, keepalive_s: Optional[float] = None,
+                 seed: int = 0,
+                 jitter: float = 0.03, max_containers=_UNSET,
+                 concurrency=_UNSET, contention: float = 0.3,
+                 batching=_UNSET):
+        axes = {"placement": placement, "keepalive": keepalive,
+                "scaling": scaling, "coldstart": coldstart,
+                "concurrency": concurrency, "batching": batching,
+                "max_containers": max_containers}
+        if stack is not None:
+            if keepalive_s is not None:
+                # keepalive_s is not one of the stack's axes, so it would
+                # be dropped silently — make the conflict loud instead
+                raise ValueError(
+                    "keepalive_s conflicts with stack=; set the TTL on the "
+                    "stack's KeepaliveConfig (stack.with_(keepalive="
+                    "KeepaliveConfig(ttl_s=...))) instead")
+            conflicts = [n for n, v in axes.items() if v is not _UNSET]
+            if conflicts:
+                raise ValueError(
+                    f"{conflicts} conflict with stack= (the stack owns "
+                    f"every policy axis); derive a variant with "
+                    f"stack.with_(...) instead")
+            # duck-typed (PolicyStack lives above this module in the import
+            # graph): fresh policy instances per construction, centralizing
+            # the state-isolation rules callers used to deep-copy for
+            axes = stack.materialize()
+        else:
+            axes = {n: (_AXIS_DEFAULTS[n] if v is _UNSET else v)
+                    for n, v in axes.items()}
+        placement = axes["placement"]
+        keepalive = axes["keepalive"]
+        scaling = axes["scaling"]
+        coldstart = axes["coldstart"]
+        concurrency = axes["concurrency"]
+        batching = axes["batching"]
+        max_containers = axes["max_containers"]
+        self.stack = stack
         if isinstance(specs, FunctionSpec):
             specs = {specs.name: specs}
         elif isinstance(specs, (list, tuple)):
@@ -90,8 +145,8 @@ class ClusterSimulator:
         self.router = Router(fleets, default=next(iter(fleets)))
 
         self.placement: PlacementPolicy = make_placement(placement)
-        self.keepalive: KeepalivePolicy = make_keepalive(keepalive,
-                                                         keepalive_s)
+        self.keepalive: KeepalivePolicy = make_keepalive(
+            keepalive, 480.0 if keepalive_s is None else keepalive_s)
         self.scaling: ScalingPolicy = make_scaling(scaling)
         self.coldstart: ColdStartPolicy = make_coldstart(coldstart)
 

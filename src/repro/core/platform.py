@@ -5,9 +5,10 @@ over the container/scheduler/billing substrate, with the paper's three CNN
 payloads pre-registered and modern ``repro.serving`` handlers attachable.
 
 The platform now fronts the policy-driven ``repro.core.cluster`` subsystem:
-construct it with ``placement= / keepalive= / scaling= / concurrency= /
-batching=`` to move off the Lambda-2017 defaults, and use ``invoke_fleet``
-to serve every deployed function from one shared cluster.
+construct it with a ``repro.core.stack.PolicyStack`` (``stack=``) — or the
+legacy per-axis kwargs, which are a thin shim that builds one — to move off
+the Lambda-2017 defaults, and use ``invoke_fleet`` to serve every deployed
+function from one shared cluster.
 
 For ready-made workload regimes (sparse / bursty / diurnal / flash-crowd /
 multi-function) use ``repro.core.scenarios``: each named scenario deploys
@@ -16,14 +17,19 @@ the policy space over it.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
-from typing import Optional, Union
+from typing import Optional
 
 from repro.core import calibration, metrics, sla
-from repro.core.cluster import BatchingConfig, ClusterSimulator, FixedTTL
+from repro.core.cluster import ClusterSimulator
 from repro.core.function import FunctionSpec, Handler
+from repro.core.stack import KeepaliveConfig, PolicyStack
 from repro.core.workload import cold_probe, step_ramp, warm_burst
+
+
+# sentinel distinguishing "kwarg omitted" from an explicitly passed
+# default, so the stack=-conflict guard sees every explicit argument
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -39,7 +45,19 @@ class InvocationReport:
 class ServerlessPlatform:
     """Deploy functions and run workloads under one policy stack.
 
-    Policy parameters (all forwarded to ``ClusterSimulator``):
+    The policy surface is a single ``repro.core.stack.PolicyStack`` value
+    (``stack=``): serializable, derivable via ``with_``, and materialized
+    into *fresh* policy instances per invocation — which is what keeps
+    repeated experiments independent (no histogram / autoscaler / snapshot
+    state leaks across ``invoke()`` calls, uniformly for every axis).
+
+    The per-axis kwargs below remain as a compatibility shim that builds
+    that stack (``PolicyStack.from_kwargs``); registry policy instances are
+    converted to their config form (constructor knobs captured, learned
+    state not).  Hand-written policy subclasses a stack cannot express go
+    to ``ClusterSimulator`` directly.
+
+    Policy parameters (all axes of the ``PolicyStack``):
 
     * ``placement`` — ``"mru"`` (default; best locality, wins sparse
       trickles) | ``"lru"`` (keeps the whole pool warm for bursts) |
@@ -47,7 +65,7 @@ class ServerlessPlatform:
     * ``keepalive`` — ``None``/``"fixed"`` (Lambda's fixed idle TTL,
       ``keepalive_s`` seconds, default 480) | ``"adaptive"`` (per-function
       gap histogram; the ``sparse`` scenario's expected winner), or an
-      instance.  Stateful instances are deep-copied per invocation so
+      instance.  Policies are materialized fresh per invocation so
       repeated experiments stay independent.
     * ``scaling`` — ``None``/``"lambda"`` (scale-out on demand only) |
       ``"predictive"`` (Knative-style warm-pool sizing; tune via
@@ -61,13 +79,14 @@ class ServerlessPlatform:
       with ``max_containers`` in ``multi_function``) | ``"package_cache"``
       (handler-keyed package cache: LOAD skipped on a hit), or an
       instance.  Stateful mitigation policies (snapshots written, cached
-      packages) are deep-copied per invocation like ``keepalive``.
+      packages) are materialized fresh per invocation like ``keepalive``.
     * ``concurrency`` — in-flight requests per container (default 1);
       above 1, requests slow each other by the cluster's contention
       factor.
-    * ``batching`` — a ``BatchingConfig`` (or ``{fn: config}``) queueing
-      arrivals into shared passes; the ``bursty`` scenario's expected
-      winner and half of ``multi_function``'s.
+    * ``batching`` — a ``BatchingConfig`` queueing arrivals into shared
+      passes; the ``bursty`` scenario's expected winner and half of
+      ``multi_function``'s.  (Per-fleet ``{fn: config}`` dicts are a
+      ``ClusterSimulator``-level feature.)
     * ``max_containers`` — shared cluster-wide container cap (0 =
       unlimited); the contention knob in ``multi_function``.
 
@@ -75,21 +94,32 @@ class ServerlessPlatform:
     are graded in.
     """
 
-    def __init__(self, *, seed: int = 0, keepalive_s: float = 480.0,
+    def __init__(self, *, seed: int = 0, keepalive_s=_UNSET,
                  use_fallback_calibration: bool = False,
-                 placement="mru", keepalive=None, scaling=None,
-                 coldstart=None, concurrency: int = 1,
-                 batching: Union[BatchingConfig, dict, None] = None,
-                 max_containers: int = 0):
+                 stack: Optional[PolicyStack] = None,
+                 placement=_UNSET, keepalive=_UNSET, scaling=_UNSET,
+                 coldstart=_UNSET, concurrency=_UNSET,
+                 batching=_UNSET, max_containers=_UNSET):
         self.seed = seed
-        self.keepalive_s = keepalive_s
-        self.placement = placement
-        self.keepalive = keepalive
-        self.scaling = scaling
-        self.coldstart = coldstart
-        self.concurrency = concurrency
-        self.batching = batching
-        self.max_containers = max_containers
+        self.keepalive_s = 480.0 if keepalive_s is _UNSET else keepalive_s
+        legacy = {"keepalive_s": keepalive_s, "placement": placement,
+                  "keepalive": keepalive, "scaling": scaling,
+                  "coldstart": coldstart, "concurrency": concurrency,
+                  "batching": batching, "max_containers": max_containers}
+        if stack is not None:
+            conflicts = [n for n, v in legacy.items() if v is not _UNSET]
+            if conflicts:
+                raise ValueError(
+                    f"{conflicts} conflict with stack= (the stack owns "
+                    f"every policy axis); derive a variant with "
+                    f"stack.with_(...) instead")
+            self.stack = stack
+        else:
+            from repro.core.cluster.cluster import AXIS_DEFAULTS
+            defaults = {"keepalive_s": 480.0, **AXIS_DEFAULTS}
+            self.stack = PolicyStack.from_kwargs(
+                **{n: (defaults[n] if v is _UNSET else v)
+                   for n, v in legacy.items()})
         self.functions: dict[str, FunctionSpec] = {}
         self._cal = None if use_fallback_calibration else calibration.calibrate()
         self._fallback = use_fallback_calibration
@@ -106,20 +136,35 @@ class ServerlessPlatform:
         return spec
 
     # ------------------------------------------------------------------
+    # the policy axes, derived from the stack itself so a new axis is one
+    # PolicyStack field away from per-call overrides and conflict checks
+    _STACK_AXES = tuple(f.name for f in dataclasses.fields(PolicyStack))
+
     def _cluster(self, specs, keepalive_s: Optional[float] = None,
                  **overrides) -> ClusterSimulator:
-        # an explicit per-call TTL wins over the configured policy (the
-        # pre-refactor invoke() contract); otherwise stateful policies
-        # (AdaptiveTTL histograms) are copied so runs stay independent
-        keepalive = (FixedTTL(keepalive_s) if keepalive_s is not None
-                     else copy.deepcopy(self.keepalive))
-        kw = dict(placement=self.placement, keepalive=keepalive,
-                  scaling=copy.deepcopy(self.scaling),
-                  coldstart=copy.deepcopy(self.coldstart),
-                  concurrency=self.concurrency,
-                  batching=self.batching, max_containers=self.max_containers,
-                  keepalive_s=self.keepalive_s,
-                  seed=self.seed)
+        # Per-call axis overrides derive a one-off stack; an explicit
+        # per-call TTL wins over everything (the pre-refactor invoke()
+        # contract).  PolicyStack.materialize() then builds fresh policy
+        # instances — the single state-isolation rule for every axis
+        # (keepalive histograms, autoscalers, snapshots, package caches,
+        # batchers, placement alike).
+        stack = self.stack
+        axis_over = {k: overrides.pop(k) for k in list(overrides)
+                     if k in self._STACK_AXES}
+        if "keepalive" in axis_over and \
+                isinstance(axis_over["keepalive"], (str, type(None))):
+            # a by-name per-call keepalive keeps the platform's TTL as its
+            # (base) TTL, matching the legacy make_keepalive contract
+            axis_over["keepalive"] = KeepaliveConfig(
+                kind=axis_over["keepalive"] or "fixed",
+                ttl_s=self.keepalive_s)
+        if axis_over:
+            stack = stack.with_(**axis_over)
+        if keepalive_s is not None and "keepalive" not in axis_over:
+            # matches the legacy kw.update(overrides) precedence: an
+            # explicit per-call keepalive policy beats the per-call TTL
+            stack = stack.with_(keepalive=KeepaliveConfig(ttl_s=keepalive_s))
+        kw = dict(stack=stack, seed=self.seed)
         kw.update(overrides)
         return ClusterSimulator(specs, **kw)
 
@@ -127,8 +172,9 @@ class ServerlessPlatform:
                keepalive_s: Optional[float] = None, **overrides):
         """Run one function's workload under the platform's policy stack.
 
-        ``keepalive_s`` forces a fixed TTL for this call; stateful policies
-        are copied per call, so repeated invocations are reproducible."""
+        ``keepalive_s`` forces a fixed TTL for this call; policies are
+        materialized fresh per call, so repeated invocations are
+        reproducible."""
         sim = self._cluster(spec, keepalive_s, **overrides)
         records = sim.run(list(workload))
         kept = [r for r in records if r.tag != "prime"]

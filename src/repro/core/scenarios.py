@@ -22,11 +22,14 @@ A ``Scenario`` bundles everything ``benchmarks/scenario_suite.py`` needs:
     cold-start axis is graded against the best classic stack, not just
     the Lambda baseline).
   * ``max_containers`` — shared cluster cap (0 = unlimited), the
-    multi-function contention knob.
-  * optional ``adaptive``/``predictive``/``coldstart`` factories returning
-    tuned policy instances for this scenario's regime (fresh per run, so
-    histogram / autoscaler / snapshot state never leaks between sweep
-    combos).
+    multi-function contention knob (``Scenario.tune`` applies it to any
+    stack that does not set its own cap).
+  * ``tuning`` — per-axis ``repro.core.stack`` configs
+    (``KeepaliveConfig`` / ``ScalingConfig`` / ``ColdstartConfig``) tuned
+    for this scenario's regime.  ``Scenario.tune(stack)`` substitutes each
+    one into a swept stack whose axis selects the same ``kind`` —
+    replacing the old per-scenario policy *factories* with declarative
+    stack overrides that serialize like everything else.
 
 Use ``get(name)`` / ``names()`` to consume the registry, ``register`` to
 extend it (e.g. a replayed production trace via ``workload.trace_replay``).
@@ -34,13 +37,13 @@ extend it (e.g. a replayed production trace via ``workload.trace_replay``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 from repro.core import workload as wl
-from repro.core.autoscaler import Autoscaler
 from repro.core.cluster import BatchingConfig
-from repro.core.cluster.policies import PredictiveWarmPool
 from repro.core.sla import INTERACTIVE, SLA
+from repro.core.stack import (BASELINE, ColdstartConfig, KeepaliveConfig,
+                              PolicyStack, ScalingConfig)
 
 # Named policy stacks: the single-axis stacks differ from ``baseline`` on
 # exactly one axis, so a scenario verdict attributes the win to that axis;
@@ -48,52 +51,38 @@ from repro.core.sla import INTERACTIVE, SLA
 # bottlenecks (queueing vs cold pools) for the shared-cap scenario, and the
 # mitigation-bearing stacks compose a ColdStartPolicy with the stack it
 # upgrades (e.g. ``snapshot_predictive`` = predictive scaling whose
-# prewarms restore from snapshots).  Values are ClusterSimulator kwargs;
-# the suite materializes per-scenario tuned instances via
-# Scenario.adaptive / Scenario.predictive / Scenario.coldstart.  Every
-# stack is a point in the suite's sweep cross-product, so verdicts read
-# straight out of the sweep table.
+# prewarms restore from snapshots).  Values are ``PolicyStack`` instances —
+# serializable, hashable, and derivable via ``with_``; the suite applies
+# per-scenario tuned axis configs via ``Scenario.tune``.  Every stack is a
+# point in the suite's sweep cross-product, so verdicts read straight out
+# of the sweep table.
+_BATCH = BatchingConfig(max_batch=4, max_wait_s=0.5)
+
 POLICY_STACKS: dict = {
-    "baseline": dict(placement="mru", keepalive="fixed", scaling="lambda",
-                     coldstart="full", concurrency=1, batching=None),
-    "adaptive": dict(placement="mru", keepalive="adaptive", scaling="lambda",
-                     coldstart="full", concurrency=1, batching=None),
-    "predictive": dict(placement="mru", keepalive="fixed",
-                       scaling="predictive", coldstart="full",
-                       concurrency=1, batching=None),
-    "batching": dict(placement="mru", keepalive="fixed", scaling="lambda",
-                     coldstart="full", concurrency=1,
-                     batching=BatchingConfig(max_batch=4, max_wait_s=0.5)),
-    "batching_predictive": dict(placement="mru", keepalive="fixed",
-                                scaling="predictive", coldstart="full",
-                                concurrency=1,
-                                batching=BatchingConfig(max_batch=4,
-                                                        max_wait_s=0.5)),
+    "baseline": BASELINE,
+    "adaptive": BASELINE.with_(keepalive="adaptive"),
+    "predictive": BASELINE.with_(scaling="predictive"),
+    "batching": BASELINE.with_(batching=_BATCH),
+    "batching_predictive": BASELINE.with_(scaling="predictive",
+                                          batching=_BATCH),
     # --- cold-start mitigation axis (single-axis attributions) ----------
-    "snapshot": dict(placement="mru", keepalive="fixed", scaling="lambda",
-                     coldstart="snapshot", concurrency=1, batching=None),
-    "layered_pool": dict(placement="mru", keepalive="fixed",
-                         scaling="lambda", coldstart="layered",
-                         concurrency=1, batching=None),
-    "package_cache": dict(placement="mru", keepalive="fixed",
-                          scaling="lambda", coldstart="package_cache",
-                          concurrency=1, batching=None),
+    "snapshot": BASELINE.with_(coldstart="snapshot"),
+    "layered_pool": BASELINE.with_(coldstart="layered"),
+    "package_cache": BASELINE.with_(coldstart="package_cache"),
     # --- composed mitigation stacks (the new scenario winners) ----------
-    "pool_predictive": dict(placement="mru", keepalive="fixed",
-                            scaling="predictive", coldstart="layered",
-                            concurrency=1, batching=None),
-    "snapshot_predictive": dict(placement="mru", keepalive="fixed",
-                                scaling="predictive", coldstart="snapshot",
-                                concurrency=1, batching=None),
-    "snapshot_batching_predictive": dict(
-        placement="mru", keepalive="fixed", scaling="predictive",
-        coldstart="snapshot", concurrency=1,
-        batching=BatchingConfig(max_batch=4, max_wait_s=0.5)),
-    "pool_batching_predictive": dict(
-        placement="mru", keepalive="fixed", scaling="predictive",
-        coldstart="layered", concurrency=1,
-        batching=BatchingConfig(max_batch=4, max_wait_s=0.5)),
+    "pool_predictive": BASELINE.with_(scaling="predictive",
+                                      coldstart="layered"),
+    "snapshot_predictive": BASELINE.with_(scaling="predictive",
+                                          coldstart="snapshot"),
+    "snapshot_batching_predictive": BASELINE.with_(
+        scaling="predictive", coldstart="snapshot", batching=_BATCH),
+    "pool_batching_predictive": BASELINE.with_(
+        scaling="predictive", coldstart="layered", batching=_BATCH),
 }
+
+# which Scenario.tuning config type tunes which PolicyStack axis
+_TUNED_AXES = {KeepaliveConfig: "keepalive", ScalingConfig: "scaling",
+               ColdstartConfig: "coldstart"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,16 +103,45 @@ class Scenario:
     max_containers: int = 0
     seed: int = 0
     tiny_scale: float = 0.02
-    adaptive: Optional[Callable] = None     # () -> AdaptiveTTL
-    predictive: Optional[Callable] = None   # () -> PredictiveWarmPool
-    coldstart: Optional[Callable] = None    # () -> ColdStartPolicy subclass
+    tuning: Tuple = ()    # per-axis stack configs (Keepalive/Scaling/
+                          # ColdstartConfig) tuned for this regime
     rival: str = ""                         # stack the winner must beat on
                                             # cold rate (pre-mitigation best)
+
+    def __post_init__(self):
+        for cfg in self.tuning:
+            if type(cfg) not in _TUNED_AXES:
+                raise TypeError(
+                    f"{self.name}: tuning entries must be KeepaliveConfig / "
+                    f"ScalingConfig / ColdstartConfig, got {cfg!r} (the "
+                    f"other axes have no per-scenario tuning — put them on "
+                    f"the stack itself)")
 
     def deploy(self, platform) -> list:
         """Deploy the fleet on ``platform``; returns specs in fleet order."""
         return [platform.deploy_paper_model(f.model, f.memory_mb)
                 for f in self.functions]
+
+    def tune(self, stack: PolicyStack) -> PolicyStack:
+        """Specialize a swept stack for this scenario: substitute each
+        ``tuning`` config into an axis that selected the same ``kind``
+        *with default knobs* (exactly what ``PolicyStack.grid`` over kind
+        names produces — so e.g. a tuned predictive autoscaler applies to
+        stacks that chose ``scaling="predictive"`` but never clobbers
+        non-default knobs in a hand-built spec; a spec opts out entirely
+        with ``ExperimentSpec(tuned=False)``), and apply the
+        scenario's shared container cap to stacks that do not set their
+        own.  Sweep keys stay the canonical un-tuned stacks; tuning
+        happens at run time, and ``ExperimentResult.effective_stack``
+        records the outcome."""
+        overrides: dict = {}
+        for cfg in self.tuning:
+            axis = _TUNED_AXES[type(cfg)]
+            if getattr(stack, axis) == type(cfg)(kind=cfg.kind):
+                overrides[axis] = cfg
+        if self.max_containers and not stack.max_containers:
+            overrides["max_containers"] = self.max_containers
+        return stack.with_(**overrides) if overrides else stack
 
     def build_trace(self, fn_names: list, scale: float = 1.0) -> list:
         if len(fn_names) != len(self.functions):
@@ -199,7 +217,7 @@ register(Scenario(
     expected_winner="batching",
     seed=7,
     tiny_scale=0.05,
-    predictive=lambda: PredictiveWarmPool(Autoscaler(min_pool=3)),
+    tuning=(ScalingConfig(kind="predictive", min_pool=3),),
 ))
 
 # diurnal: a deep day/night cycle on the heaviest model at its smallest
@@ -219,8 +237,8 @@ register(Scenario(
     expected_winner="predictive",
     seed=11,
     tiny_scale=0.05,
-    predictive=lambda: PredictiveWarmPool(
-        Autoscaler(window_s=600.0, margin=2.0, min_pool=3)),
+    tuning=(ScalingConfig(kind="predictive", window_s=600.0, margin=2.0,
+                          min_pool=3),),
 ))
 
 # flash_crowd: one sudden 4 rps spike on the heavy model.  The first cold
@@ -251,8 +269,8 @@ register(Scenario(
     rival="predictive",
     seed=13,
     tiny_scale=0.2,
-    predictive=lambda: PredictiveWarmPool(
-        Autoscaler(window_s=60.0, margin=2.0, min_pool=6)),
+    tuning=(ScalingConfig(kind="predictive", window_s=60.0, margin=2.0,
+                          min_pool=6),),
 ))
 
 # multi_function: three models with heterogeneous streams contending for a
@@ -289,5 +307,5 @@ register(Scenario(
     max_containers=3,
     seed=17,
     tiny_scale=0.05,
-    predictive=lambda: PredictiveWarmPool(Autoscaler(min_pool=1)),
+    tuning=(ScalingConfig(kind="predictive", min_pool=1),),
 ))

@@ -96,8 +96,11 @@ def test_suite_smoke_result_schema(tiny_suite):
         v = res["verdict"]
         assert v["expected_winner"] in POLICY_STACKS
         assert isinstance(v["win"], bool)
-        assert v["baseline"] is res["rows"][
-            scenario_suite._stack_key("baseline")]
+        # rows are keyed by canonical PolicyStack values, so every named
+        # stack indexes its sweep row directly
+        assert v["baseline"] is res["rows"][POLICY_STACKS["baseline"]]
+        assert v["winner"] is res["rows"][
+            POLICY_STACKS[res["verdict"]["expected_winner"]]]
 
 
 def test_suite_smoke_report_files(tiny_suite):

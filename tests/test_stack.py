@@ -1,0 +1,464 @@
+"""PolicyStack / ExperimentSpec: serialization round-trips, canonical
+equality, grid expansion, kwargs-shim equivalence (bit-identical records),
+golden parity of the baseline stack, and platform state isolation."""
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+
+import pytest
+
+import repro.core.container as container_mod
+from repro.core.cluster import (AdaptiveTTL, BatchingConfig, ClusterSimulator,
+                                LayeredPool, PredictiveWarmPool,
+                                SnapshotRestore)
+from repro.core.autoscaler import Autoscaler
+from repro.core.function import FunctionSpec, Handler
+from repro.core.scenarios import POLICY_STACKS, get as get_scenario
+from repro.core.stack import (BASELINE, ColdstartConfig, ExperimentSpec,
+                              KeepaliveConfig, PolicyStack, ScalingConfig)
+from repro.core.workload import cold_probe, poisson, step_ramp, warm_burst
+
+H = Handler(name="t", base_cpu_seconds=0.2, bootstrap_cpu_seconds=1.0,
+            package_mb=45.0, peak_memory_mb=100.0)
+
+
+def _spec(m=1024):
+    return FunctionSpec(handler=H, memory_mb=m)
+
+
+def _reset_cids():
+    container_mod._ids = itertools.count()
+
+
+def _canon(records):
+    return [dataclasses.astuple(r) for r in records]
+
+
+# A stack exercising every non-default axis knob at once.
+TUNED = PolicyStack(
+    placement="least_loaded",
+    keepalive=KeepaliveConfig(kind="adaptive", ttl_s=120.0, percentile=95.0,
+                              margin=1.5, min_ttl_s=10.0, max_ttl_s=900.0,
+                              window=64),
+    scaling=ScalingConfig(kind="predictive", window_s=60.0, margin=2.0,
+                          min_pool=3),
+    coldstart=ColdstartConfig(kind="snapshot", restore_factor=0.3,
+                              min_restore_s=0.2),
+    concurrency=4,
+    batching=BatchingConfig(max_batch=8, max_wait_s=0.1, amortization=0.2),
+    max_containers=5)
+
+
+# ------------------------------------------------------------- serialization
+@pytest.mark.parametrize("name", sorted(POLICY_STACKS))
+def test_policy_stacks_json_round_trip(name):
+    s = POLICY_STACKS[name]
+    rt = PolicyStack.from_dict(json.loads(json.dumps(s.to_dict())))
+    assert rt == s
+    assert hash(rt) == hash(s)
+
+
+def test_tuned_stack_round_trip_keeps_every_knob():
+    rt = PolicyStack.from_json(TUNED.to_json())
+    assert rt == TUNED
+    assert rt.keepalive.percentile == 95.0
+    assert rt.scaling.min_pool == 3
+    assert rt.coldstart.restore_factor == 0.3
+    assert rt.batching == BatchingConfig(max_batch=8, max_wait_s=0.1,
+                                         amortization=0.2)
+
+
+def test_unread_knobs_are_rejected_not_silently_dropped():
+    """A non-default value for a knob the selected kind never reads is
+    lost intent (typo'd kind, knob on the wrong axis) and raises — so
+    every constructible config is canonical, and equality/hash mean
+    'materializes the same policies' (the old tuple fingerprints could
+    not say that)."""
+    with pytest.raises(ValueError, match="never reads"):
+        KeepaliveConfig(kind="fixed", percentile=50.0)
+    with pytest.raises(ValueError, match="min_pool"):
+        ScalingConfig(kind="lambda", min_pool=9)
+    with pytest.raises(ValueError, match="restore_factor"):
+        ColdstartConfig(kind="layered", restore_factor=0.9)
+    # defaults written out explicitly are fine (the JSON round-trip form)
+    assert KeepaliveConfig(kind="fixed", percentile=99.0) == KeepaliveConfig()
+    a = PolicyStack(keepalive=KeepaliveConfig(kind="fixed", ttl_s=480.0))
+    assert a == BASELINE and hash(a) == hash(BASELINE)
+
+
+def test_unknown_kinds_and_axes_are_loud():
+    with pytest.raises(KeyError, match="keepalive"):
+        KeepaliveConfig(kind="nope")
+    with pytest.raises(KeyError, match="coldstart"):
+        PolicyStack(coldstart="nope")
+    with pytest.raises(TypeError, match="axes"):
+        BASELINE.with_(keepalives="adaptive")
+    with pytest.raises(ValueError, match="window_s"):
+        ScalingConfig(kind="predictive", window_s=1e9)
+
+
+# ----------------------------------------------------------------- with_ / grid
+def test_with_derivation_and_instance_coercion():
+    adaptive = BASELINE.with_(keepalive="adaptive")
+    assert adaptive == POLICY_STACKS["adaptive"]
+    assert BASELINE == PolicyStack()          # with_ never mutates
+    # registry policy instances coerce to their config form (knobs kept)
+    via_instance = BASELINE.with_(
+        scaling=PredictiveWarmPool(Autoscaler(min_pool=3)),
+        coldstart=LayeredPool(pool_size=2),
+        keepalive=AdaptiveTTL(base_ttl_s=60.0, window=16))
+    assert via_instance.scaling == ScalingConfig(kind="predictive",
+                                                 min_pool=3)
+    assert via_instance.coldstart == ColdstartConfig(kind="layered",
+                                                     pool_size=2)
+    assert via_instance.keepalive.ttl_s == 60.0
+    assert via_instance.keepalive.window == 16
+
+
+def test_grid_cross_product_size_uniqueness_and_membership():
+    from benchmarks.scenario_suite import AXES
+    stacks = PolicyStack.grid(AXES)
+    n = 1
+    for vals in AXES.values():
+        n *= len(vals)
+    assert len(stacks) == n
+    assert len(set(stacks)) == n              # hashable and all distinct
+    # every named stack is a point of the suite's cross-product
+    for name, s in POLICY_STACKS.items():
+        assert s in set(stacks), name
+    # deriving the grid from a non-default base keeps the base's axes
+    capped = PolicyStack.grid({"keepalive": ("fixed", "adaptive")},
+                              base=BASELINE.with_(max_containers=3))
+    assert all(s.max_containers == 3 for s in capped)
+
+
+# -------------------------------------------------------- materialize / shim
+def test_materialize_builds_fresh_instances_every_call():
+    a, b = TUNED.materialize(), TUNED.materialize()
+    for axis in ("placement", "keepalive", "scaling", "coldstart"):
+        assert a[axis] is not b[axis]
+    assert isinstance(a["keepalive"], AdaptiveTTL)
+    assert isinstance(a["coldstart"], SnapshotRestore)
+    a["keepalive"].observe_gap("f", 1.0)      # state never shared
+    assert b["keepalive"].ttl("f") == TUNED.keepalive.ttl_s
+
+
+KW_CASES = {
+    "adaptive_conc": dict(keepalive="adaptive", concurrency=2,
+                          placement="least_loaded"),
+    "predictive_snapshot": dict(scaling="predictive", coldstart="snapshot"),
+    "pool_batching_capped": dict(
+        coldstart="layered", max_containers=2,
+        batching=BatchingConfig(max_batch=4, max_wait_s=0.5)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(KW_CASES), ids=sorted(KW_CASES))
+def test_kwargs_shim_equivalent_to_stack(case):
+    """ClusterSimulator(**legacy kwargs) and ClusterSimulator(stack=...)
+    produce bit-identical record streams."""
+    kwargs = KW_CASES[case]
+    wl = poisson(0.05, 4000.0, seed=2)
+    _reset_cids()
+    legacy = ClusterSimulator(_spec(), seed=0, **kwargs).run(list(wl))
+    _reset_cids()
+    stacked = ClusterSimulator(
+        _spec(), seed=0,
+        stack=PolicyStack.from_kwargs(**kwargs)).run(list(wl))
+    assert _canon(legacy) == _canon(stacked)
+
+
+def test_from_kwargs_keepalive_s_matches_legacy_default():
+    wl = poisson(0.02, 20000.0, seed=1)
+    _reset_cids()
+    legacy = ClusterSimulator(_spec(), seed=0, keepalive_s=75.0).run(list(wl))
+    _reset_cids()
+    stacked = ClusterSimulator(
+        _spec(), seed=0,
+        stack=PolicyStack.from_kwargs(keepalive_s=75.0)).run(list(wl))
+    assert _canon(legacy) == _canon(stacked)
+
+
+# ------------------------------------------------------------- golden parity
+_GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__), "data",
+                                      "simulator_golden.json")))
+_CASES = {
+    "cold_probe": (lambda: cold_probe(), {}),
+    "warm_burst": (lambda: warm_burst(), {}),
+    "step_ramp": (lambda: step_ramp(), {}),
+    "throttled": (lambda: step_ramp(10, 0, 3),
+                  {"max_containers": 2, "seed": 3}),
+    "evictions": (lambda: poisson(0.02, 20000.0, seed=1),
+                  {"keepalive_s": 75.0}),
+}
+
+
+def _golden_canon(records):
+    return [[r.rid, float(r.arrival_s).hex(), float(r.start_exec_s).hex(),
+             float(r.end_s).hex(), r.cold, float(r.prediction_s).hex(),
+             float(r.exec_s).hex(), float(r.cost).hex(), r.container_id,
+             r.memory_mb, r.tag] for r in records]
+
+
+@pytest.mark.parametrize("case", sorted(_CASES), ids=sorted(_CASES))
+def test_baseline_stack_bit_identical_to_pre_refactor_golden(case):
+    """The baseline PolicyStack reproduces the pre-refactor monolith's
+    records bit-for-bit — the stack= path adds nothing on top of the
+    pinned default kwargs path."""
+    wl, kw = _CASES[case]
+    kw = dict(kw)
+    seed = kw.pop("seed", 0)
+    stack = POLICY_STACKS["baseline"]
+    if "keepalive_s" in kw:
+        stack = stack.with_(
+            keepalive=KeepaliveConfig(ttl_s=kw.pop("keepalive_s")))
+    if "max_containers" in kw:
+        stack = stack.with_(max_containers=kw.pop("max_containers"))
+    assert not kw
+    _reset_cids()
+    recs = ClusterSimulator(_spec(), seed=seed, stack=stack).run(wl())
+    rows = _golden_canon(recs)
+    assert len(rows) == _GOLDEN[case]["n"]
+    digest = hashlib.sha256(
+        json.dumps(rows, sort_keys=True).encode()).hexdigest()
+    assert digest == _GOLDEN[case]["sha256"]
+
+
+# ------------------------------------------------------ platform isolation
+def test_platform_no_policy_state_leaks_across_invokes():
+    """Every stateful axis at once (adaptive histograms, autoscaler
+    arrivals, snapshots, batcher queues): repeated invoke() calls are
+    bit-identical because materialize() builds fresh instances — the old
+    per-axis deep-copy asymmetry (batching/placement skipped) is gone."""
+    from repro.core.platform import ServerlessPlatform
+    plat = ServerlessPlatform(seed=0, use_fallback_calibration=True,
+                              stack=TUNED.with_(placement="mru",
+                                                max_containers=0))
+    spec = plat.deploy_paper_model("squeezenet", 1024)
+    wl = poisson(0.05, 2000.0, seed=4)
+    a, sim_a = plat.invoke(spec, list(wl))
+    b, sim_b = plat.invoke(spec, list(wl))
+    # container ids differ (module-global counter), so compare timings
+    strip = lambda recs: [(r.rid, r.arrival_s, r.start_exec_s, r.end_s,
+                           r.cold, r.cost, r.batch_size) for r in recs]
+    assert strip(a) == strip(b)
+    assert sim_a.cold_starts == sim_b.cold_starts
+    assert sim_a.mitigation_cost == sim_b.mitigation_cost
+    # and the platform's own policy objects were never touched
+    assert sim_a.keepalive is not sim_b.keepalive
+    assert sim_a.coldstart is not sim_b.coldstart
+
+
+def test_platform_by_name_keepalive_override_keeps_platform_ttl():
+    """invoke(keepalive='adaptive'|'fixed'|None) uses the platform's
+    keepalive_s as the (base) TTL, matching the legacy make_keepalive
+    contract (regression: the override coerced to the 480 s default)."""
+    from repro.core.platform import ServerlessPlatform
+    plat = ServerlessPlatform(seed=0, use_fallback_calibration=True,
+                              keepalive_s=600.0)
+    spec = plat.deploy_paper_model("squeezenet", 1024)
+    _, sim = plat.invoke(spec, [], keepalive="adaptive")
+    assert sim.keepalive.base_ttl_s == 600.0
+    _, sim = plat.invoke(spec, [], keepalive="fixed")
+    assert sim.keepalive.ttl_s == 600.0
+
+
+def test_per_fleet_batching_dict_rejected_with_pointer():
+    with pytest.raises(TypeError, match="ClusterSimulator-level"):
+        BASELINE.with_(batching={"resnet18@1024": BatchingConfig()})
+    assert (BASELINE.with_(batching={"max_batch": 2}).batching
+            == BatchingConfig(max_batch=2))
+    # the legacy empty per-fleet map means "no batching", not defaults
+    assert BASELINE.with_(batching={}).batching is None
+
+
+def test_custom_policy_subclasses_rejected_not_flattened():
+    """A hand-written subclass carries behaviour a config cannot express;
+    coercing it to the base config would silently run the wrong policy, so
+    every axis raises and points at ClusterSimulator's legacy kwargs."""
+    from repro.core.cluster.policies import MRUPlacement
+
+    class MyPlacement(MRUPlacement):
+        def choose(self, candidates, inflight):
+            return min(candidates)[1] if candidates else None
+
+    class MyTTL(AdaptiveTTL):
+        def ttl(self, fn=""):
+            return 7.0
+
+    for axis, bad in (("placement", MyPlacement()), ("keepalive", MyTTL())):
+        with pytest.raises(TypeError, match="ClusterSimulator"):
+            BASELINE.with_(**{axis: bad})
+    # exact registry instances still coerce
+    assert BASELINE.with_(placement=MRUPlacement()).placement == "mru"
+    # the escape hatch named in the error actually honors the subclass
+    sim = ClusterSimulator(_spec(), keepalive=MyTTL(), seed=0)
+    assert sim.keepalive.ttl("f") == 7.0
+
+
+def test_cluster_rejects_keepalive_s_alongside_stack():
+    with pytest.raises(ValueError, match="keepalive_s conflicts"):
+        ClusterSimulator(_spec(), stack=BASELINE, keepalive_s=60.0)
+    sim = ClusterSimulator(_spec(), keepalive_s=60.0)    # legacy path fine
+    assert sim.keepalive.ttl_s == 60.0
+
+
+def test_stack_plus_axis_kwargs_is_a_loud_conflict():
+    """The stack owns every axis: mixing stack= with per-axis kwargs would
+    silently run the stack and drop the kwarg, so both constructors raise
+    instead of measuring the wrong policy."""
+    with pytest.raises(ValueError, match="coldstart"):
+        ClusterSimulator(_spec(), stack=POLICY_STACKS["predictive"],
+                         coldstart="snapshot")
+    from repro.core.platform import ServerlessPlatform
+    with pytest.raises(ValueError, match="scaling"):
+        ServerlessPlatform(use_fallback_calibration=True, stack=BASELINE,
+                           scaling="predictive")
+    with pytest.raises(ValueError, match="keepalive_s"):
+        ServerlessPlatform(use_fallback_calibration=True, stack=BASELINE,
+                           keepalive_s=60.0)
+    # non-axis knobs (seed, jitter) still compose with stack=
+    assert ClusterSimulator(_spec(), stack=BASELINE, seed=3,
+                            jitter=0.0).jitter == 0.0
+
+
+def test_platform_legacy_kwargs_build_the_same_stack():
+    from repro.core.platform import ServerlessPlatform
+    plat = ServerlessPlatform(seed=0, use_fallback_calibration=True,
+                              keepalive="adaptive", scaling="predictive",
+                              concurrency=2)
+    assert plat.stack == BASELINE.with_(keepalive="adaptive",
+                                        scaling="predictive", concurrency=2)
+
+
+def test_explicit_default_axis_kwarg_still_conflicts_with_stack():
+    """The guard uses sentinels, so even an explicitly passed default
+    value (batching=None, concurrency=1) is a loud conflict — explicit
+    intent is never silently outvoted by the stack."""
+    with pytest.raises(ValueError, match="batching"):
+        ClusterSimulator(_spec(), stack=POLICY_STACKS["batching"],
+                         batching=None)
+    from repro.core.platform import ServerlessPlatform
+    with pytest.raises(ValueError, match="keepalive_s"):
+        ServerlessPlatform(use_fallback_calibration=True, stack=BASELINE,
+                           keepalive_s=480.0)
+
+
+def test_scenario_rejects_untunable_config_types_at_construction():
+    from repro.core.scenarios import FleetFunction, Scenario
+    from repro.core.sla import INTERACTIVE
+    with pytest.raises(TypeError, match="tuning entries"):
+        Scenario(name="bad", description="x",
+                 functions=(FleetFunction("resnet18", 1024),),
+                 trace=lambda fns, seed, scale: [], sla=INTERACTIVE,
+                 expected_winner="adaptive",
+                 tuning=(BatchingConfig(max_batch=8),))
+
+
+# ------------------------------------------------------------ Scenario.tune
+def test_scenario_tune_fills_defaults_but_never_clobbers_explicit_knobs():
+    """Tuning substitutes into default-for-kind axes (what grid produces
+    from kind names) but explicit knobs in a hand-built spec always win —
+    so a report's numbers are attributable to the stack it embeds."""
+    sc = get_scenario("flash_crowd")   # tuning: predictive 60/2/6
+    swept = BASELINE.with_(scaling="predictive")
+    tuned = sc.tune(swept)
+    assert tuned.scaling == ScalingConfig(kind="predictive", window_s=60.0,
+                                          margin=2.0, min_pool=6)
+    explicit = BASELINE.with_(
+        scaling=ScalingConfig(kind="predictive", min_pool=2))
+    assert sc.tune(explicit).scaling.min_pool == 2
+    # non-matching kinds are left alone entirely
+    assert sc.tune(BASELINE).scaling == ScalingConfig()
+
+
+def test_experiment_result_records_effective_stack():
+    sc = get_scenario("multi_function")
+    spec = ExperimentSpec(scenario="multi_function", stack="predictive",
+                          scale=sc.tiny_scale)
+    result = spec.run()
+    eff = PolicyStack.from_dict(result.effective_stack)
+    assert eff.scaling.min_pool == 1          # scenario tuning applied...
+    assert eff.max_containers == 3            # ...and the shared cap
+    assert result.to_dict()["effective_stack"] == result.effective_stack
+
+
+def test_experiment_spec_tuned_false_runs_verbatim():
+    """tuned=False opts out of Scenario.tune entirely: the stack (and cap)
+    run exactly as written, and effective_stack == the spec's stack."""
+    sc = get_scenario("multi_function")
+    spec = ExperimentSpec(scenario="multi_function", stack="predictive",
+                          scale=sc.tiny_scale, tuned=False)
+    result = spec.run()
+    assert result.effective_stack == POLICY_STACKS["predictive"].to_dict()
+    tuned = ExperimentSpec(scenario="multi_function", stack="predictive",
+                           scale=sc.tiny_scale).run()
+    # the floor + cap actually change the outcome, so the knob is real
+    assert (result.cold_rate, result.p95_s) != (tuned.cold_rate,
+                                                tuned.p95_s)
+    rt = ExperimentSpec.from_dict(spec.to_dict())
+    assert rt == spec and rt.tuned is False
+
+
+def test_platform_per_call_keepalive_policy_beats_per_call_ttl():
+    """invoke(keepalive_s=..., keepalive=...) keeps the legacy precedence:
+    the explicit policy override wins over the per-call TTL."""
+    from repro.core.platform import ServerlessPlatform
+    plat = ServerlessPlatform(seed=0, use_fallback_calibration=True)
+    spec = plat.deploy_paper_model("squeezenet", 1024)
+    _, sim = plat.invoke(spec, [], keepalive_s=60.0, keepalive="adaptive")
+    assert isinstance(sim.keepalive, AdaptiveTTL)
+    _, sim = plat.invoke(spec, [], keepalive_s=60.0)
+    assert sim.keepalive.ttl_s == 60.0
+
+
+# ------------------------------------------------------------ ExperimentSpec
+def test_experiment_spec_round_trip_and_name_resolution():
+    spec = ExperimentSpec(scenario="sparse", stack="adaptive", scale=0.02,
+                          versus="baseline")
+    assert spec.stack == POLICY_STACKS["adaptive"]   # names resolve
+    rt = ExperimentSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert rt == spec
+    with pytest.raises(KeyError, match="known"):
+        ExperimentSpec(scenario="sparse", stack="nope")
+
+
+def test_experiment_spec_run_matches_suite_row():
+    """A spec run reproduces the suite's per-combo numbers for the same
+    scenario/stack/scale — the one-artifact reproducibility contract."""
+    from benchmarks.scenario_suite import run_combo
+    from repro.core.platform import ServerlessPlatform
+    sc = get_scenario("sparse")
+    spec = ExperimentSpec(scenario="sparse", stack="adaptive",
+                          scale=sc.tiny_scale, versus="baseline")
+    result = spec.run()
+    plat = ServerlessPlatform(seed=0, use_fallback_calibration=True)
+    specs = sc.deploy(plat)
+    trace = sc.build_trace([s.name for s in specs], scale=sc.tiny_scale)
+    row = run_combo(specs, trace, POLICY_STACKS["adaptive"], sla=sc.sla,
+                    scenario=sc)
+    assert result.cold_rate == row["cold_rate"]
+    assert result.p95_s == row["p95_s"]
+    assert result.cost_per_1k == row["cost_per_1k"]
+    assert result.sla_ok == row["sla_ok"]
+    assert result.verdict is not None and "win" in result.verdict
+    d = result.to_dict()
+    assert d["spec"]["scenario"] == "sparse"
+    assert d["verdict"]["versus"] == "baseline"
+
+
+def test_run_experiment_cli_on_checked_in_specs(tmp_path):
+    """The CLI reproduces a suite verdict from the JSON artifact alone."""
+    from benchmarks.run_experiment import main
+    spec_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "examples", "specs",
+                             "sparse_adaptive_tiny.json")
+    rc = main([spec_path, "--out-dir", str(tmp_path)])
+    assert rc == 0
+    report = json.load(open(tmp_path / "sparse_adaptive_tiny_report.json"))
+    assert report["verdict"]["win"] is True
+    # the report embeds the fully-expanded spec: re-runnable as-is
+    again = ExperimentSpec.from_dict(report["spec"])
+    assert again.stack == POLICY_STACKS["adaptive"]
