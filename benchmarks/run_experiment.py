@@ -15,11 +15,15 @@ Run:
     PYTHONPATH=src python -m benchmarks.run_experiment \
         examples/specs/sparse_adaptive_tiny.json
     PYTHONPATH=src python -m benchmarks.run_experiment \
-        examples/specs/*.json --out-dir artifacts/experiments
+        examples/specs/*.json --out-dir artifacts/experiments --jobs 4
 
 Exit status is 1 if any spec's ``versus`` verdict is NO-WIN (the suite's
 gate; SLA status is reported but not gating — tiny smoke traces routinely
 miss the full-scale SLA while still showing the policy win).
+
+``--jobs N`` runs the spec files over a process pool (each spec is an
+independent, deterministic work unit, so reports are identical to a
+serial run; output order follows the argument order either way).
 """
 from __future__ import annotations
 
@@ -43,16 +47,29 @@ def run_spec_file(path: str, out_dir: str) -> dict:
     return {"spec": spec, "result": result, "report_path": report_path}
 
 
+def _run_spec_file_task(args: tuple) -> dict:
+    return run_spec_file(*args)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("specs", nargs="+", help="ExperimentSpec JSON file(s)")
     ap.add_argument("--out-dir", default="artifacts/experiments",
                     help="report directory (one JSON per spec)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes (default 1 = serial)")
     args = ap.parse_args(argv)
 
+    if args.jobs > 1 and len(args.specs) > 1:
+        from repro.core.stack import pool_executor
+        with pool_executor(args.jobs) as pool:
+            outs = list(pool.map(_run_spec_file_task,
+                                 [(p, args.out_dir) for p in args.specs]))
+    else:
+        outs = [run_spec_file(p, args.out_dir) for p in args.specs]
+
     ok = True
-    for path in args.specs:
-        out = run_spec_file(path, args.out_dir)
+    for path, out in zip(args.specs, outs):
         r = out["result"]
         print(f"[run_experiment] {os.path.basename(path)} -> "
               f"{out['report_path']}")

@@ -19,10 +19,16 @@ with the pre-suite implementation.
 Run:
 
     PYTHONPATH=src python -m benchmarks.scenario_suite            # full
+    PYTHONPATH=src python -m benchmarks.scenario_suite --jobs 4   # parallel
     PYTHONPATH=src python -m benchmarks.scenario_suite --tiny     # CI smoke
     PYTHONPATH=src python -m benchmarks.scenario_suite --list
     PYTHONPATH=src python -m benchmarks.scenario_suite \
         --scenarios bursty diurnal --out-dir artifacts/scenario_report
+
+``--jobs N`` fans every scenario's policy grid out over one shared pool
+of N worker processes (``repro.core.stack.run_specs``); each grid point
+is an independent deterministic work unit, so the reports are
+byte-identical to a serial run.
 """
 from __future__ import annotations
 
@@ -34,7 +40,7 @@ from repro.core import scenarios
 from repro.core.cluster import BatchingConfig
 from repro.core.platform import ServerlessPlatform
 from repro.core.scenarios import POLICY_STACKS, Scenario
-from repro.core.stack import PolicyStack, run_stack
+from repro.core.stack import ExperimentSpec, PolicyStack, run_specs, run_stack
 
 # The sweep axes (expanded by ``PolicyStack.grid``).  Batching settings
 # match POLICY_STACKS["batching"] so the expected-winner verdict reads its
@@ -71,7 +77,7 @@ def run_combo(specs, trace, stack: PolicyStack, *, seed=0, sla=None,
 
 def run_scenario(scenario: Scenario, *, scale: float = 1.0,
                  platform: ServerlessPlatform | None = None,
-                 axes: dict = AXES) -> dict:
+                 axes: dict = AXES, jobs: int = 1) -> dict:
     """Sweep the policy cross-product on one scenario.
 
     Returns ``{"scenario", "n_requests", "rows": {PolicyStack: row},
@@ -80,16 +86,52 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
     Row keys are the canonical un-tuned stacks from ``PolicyStack.grid``
     (tuning is applied at run time), so every ``POLICY_STACKS`` entry
     indexes its sweep row directly.
+
+    ``jobs > 1`` fans the grid points out as pickled ``ExperimentSpec``
+    work units over a process pool (``repro.core.stack.run_specs``);
+    workers rebuild the deterministic (fleet, trace) context once each and
+    share it across their grid points, and rows merge back keyed by
+    canonical stack equality — the report is byte-identical to a serial
+    run (every grid point is an independent, deterministic work unit).
+    Parallel runs require the scenario to be registered under its name
+    and use the suite's default platform.
     """
+    if jobs > 1:
+        _check_parallelizable(scenario, platform)
     platform = platform or ServerlessPlatform(seed=0,
                                               use_fallback_calibration=True)
     specs = scenario.deploy(platform)
     trace = scenario.build_trace([s.name for s in specs], scale=scale)
 
-    rows = {stack: run_combo(specs, trace, stack, sla=scenario.sla,
-                             scenario=scenario)
-            for stack in PolicyStack.grid(axes)}
+    stacks = PolicyStack.grid(axes)
+    if jobs > 1:
+        work = [ExperimentSpec(scenario=scenario.name, stack=stack,
+                               scale=scale) for stack in stacks]
+        rows = dict(zip(stacks, run_specs(work, jobs=jobs)))
+    else:
+        rows = {stack: run_combo(specs, trace, stack, sla=scenario.sla,
+                                 scenario=scenario)
+                for stack in stacks}
+    return _grade(scenario, [s.name for s in specs], len(trace), rows, scale)
 
+
+def _check_parallelizable(scenario: Scenario,
+                          platform: ServerlessPlatform | None) -> None:
+    if platform is not None:
+        raise ValueError(
+            "jobs > 1 cannot replicate a custom platform in worker "
+            "processes; pass platform=None (the suite default) or run "
+            "serially")
+    if scenarios.SCENARIOS.get(scenario.name) is not scenario:
+        raise ValueError(
+            f"jobs > 1 requires a registered scenario (workers resolve "
+            f"{scenario.name!r} by name via repro.core.scenarios.get)")
+
+
+def _grade(scenario: Scenario, fleet_names: list, n_requests: int,
+           rows: dict, scale: float) -> dict:
+    """Assemble one scenario's result dict from its sweep rows (shared by
+    the serial and parallel paths, so their reports agree byte for byte)."""
     base = rows[POLICY_STACKS["baseline"]]
     winner = rows[POLICY_STACKS[scenario.expected_winner]]
     verdict = {
@@ -109,7 +151,7 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
         verdict["win"] = bool(verdict["win"]
                               and verdict["beats_rival_cold"])
     return {"scenario": scenario.name, "description": scenario.description,
-            "fleet": [s.name for s in specs], "n_requests": len(trace),
+            "fleet": fleet_names, "n_requests": n_requests,
             "sla": scenario.sla.name, "scale": scale,
             "max_containers": scenario.max_containers,
             "rows": rows, "verdict": verdict}
@@ -219,18 +261,50 @@ def write_reports(results: list, out_dir: str) -> tuple:
 
 
 def run_suite(names: list | None = None, *, scale: float | None = None,
-              tiny: bool = False,
+              tiny: bool = False, jobs: int = 1,
               out_dir: str = "artifacts/scenario_report") -> list:
     """Run the suite over ``names`` (default: every registered scenario).
 
     ``tiny`` shrinks each trace by its scenario's ``tiny_scale`` (the CI
-    smoke configuration); an explicit ``scale`` overrides both.
+    smoke configuration); an explicit ``scale`` overrides both.  ``jobs``
+    fans every scenario's policy grid out over ONE shared pool of that
+    many worker processes (default serial; reports are byte-identical
+    either way — each grid point is an independent deterministic work
+    unit, and rows merge back keyed by canonical stack equality).
     """
-    results = []
+    picked = []
     for name in (names or scenarios.names()):
         sc = scenarios.get(name)
         eff = scale if scale is not None else (sc.tiny_scale if tiny else 1.0)
-        results.append(run_scenario(sc, scale=eff))
+        picked.append((sc, eff))
+    if jobs <= 1:
+        results = [run_scenario(sc, scale=eff) for sc, eff in picked]
+    else:
+        # one pool for the whole suite: scenarios' grids interleave across
+        # workers (better load balance than per-scenario pools, one
+        # startup cost), then rows split back per scenario positionally.
+        # The parent still deploys + builds each trace (needed for fleet
+        # names / n_requests and as a fail-fast config check): all five
+        # full-scale builds cost ~0.07 s with the vectorized generators —
+        # scenario traces are thousands of requests, not the 1M simloop one
+        stacks = PolicyStack.grid(AXES)
+        work, inputs = [], []
+        for sc, eff in picked:
+            _check_parallelizable(sc, None)
+            platform = ServerlessPlatform(seed=0,
+                                          use_fallback_calibration=True)
+            fleet_specs = sc.deploy(platform)
+            trace = sc.build_trace([s.name for s in fleet_specs], scale=eff)
+            inputs.append(([s.name for s in fleet_specs], len(trace)))
+            work += [ExperimentSpec(scenario=sc.name, stack=stack, scale=eff)
+                     for stack in stacks]
+        flat = run_specs(work, jobs=jobs)
+        results = []
+        for i, (sc, eff) in enumerate(picked):
+            rows = dict(zip(stacks, flat[i * len(stacks):
+                                         (i + 1) * len(stacks)]))
+            fleet_names, n_requests = inputs[i]
+            results.append(_grade(sc, fleet_names, n_requests, rows, eff))
     if out_dir:
         write_reports(results, out_dir)
     return results
@@ -246,6 +320,10 @@ def main(argv=None) -> int:
                     help="explicit duration scale (overrides --tiny)")
     ap.add_argument("--out-dir", default="artifacts/scenario_report",
                     help="report directory (md + csv)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for the policy sweep (default "
+                         "1 = serial; reports are byte-identical either "
+                         "way)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -258,7 +336,7 @@ def main(argv=None) -> int:
         return 0
 
     results = run_suite(args.scenarios, scale=args.scale, tiny=args.tiny,
-                        out_dir=args.out_dir)
+                        jobs=args.jobs, out_dir=args.out_dir)
     print(suite_markdown(results))
     print(f"[scenario_suite] report written to {args.out_dir}/"
           f"scenario_report.{{md,csv}}")

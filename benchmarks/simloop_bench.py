@@ -15,10 +15,18 @@ Run:
     PYTHONPATH=src python -m benchmarks.simloop_bench -n 200000 \
         --out artifacts/BENCH_simloop.json
     PYTHONPATH=src python -m benchmarks.simloop_bench --stack adaptive
+    PYTHONPATH=src python -m benchmarks.simloop_bench --tiny \
+        --baseline benchmarks/baseline_simloop.json --tolerance 0.30
 
 ``--stack`` names any ``POLICY_STACKS`` entry, so the event-loop cost of a
 non-default policy stack (extra EXPIRE re-checks, PHASE_DONE chains, FLUSH
 events) is measurable with the same harness.
+
+``--baseline`` turns the run into a perf-regression guard: the measured
+``events_per_sec`` is compared against the committed baseline JSON and the
+process exits 2 when it falls more than ``--tolerance`` (default 30% —
+generous, because CI machines are noisy) below it.  CI runs the tiny
+configuration against ``benchmarks/baseline_simloop.json`` on every push.
 """
 from __future__ import annotations
 
@@ -81,6 +89,13 @@ def main(argv=None) -> int:
                          "artifacts/BENCH_simloop.json; non-baseline "
                          "stacks get BENCH_simloop_<stack>.json so they "
                          "never clobber the baseline perf trajectory)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON to guard against; exits "
+                         "2 when events_per_sec regresses more than "
+                         "--tolerance below it")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional regression vs --baseline "
+                         "(default 0.30)")
     args = ap.parse_args(argv)
     if args.out is None:
         suffix = "" if args.stack == "baseline" else f"_{args.stack}"
@@ -105,6 +120,23 @@ def main(argv=None) -> int:
           f"-> {result['events_per_sec']:,.0f} events/s "
           f"({result['requests_per_sec']:,.0f} req/s); "
           f"written to {args.out}")
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        if base.get("stack", "baseline") != args.stack or \
+                bool(base.get("tiny")) != bool(args.tiny):
+            ap.error(f"baseline {args.baseline} was measured with "
+                     f"stack={base.get('stack', 'baseline')!r} "
+                     f"tiny={base.get('tiny')} — not comparable to this "
+                     f"run (stack={args.stack!r} tiny={args.tiny})")
+        floor = base["events_per_sec"] * (1.0 - args.tolerance)
+        verdict = "OK" if result["events_per_sec"] >= floor else "REGRESSED"
+        print(f"[simloop_bench] perf guard: {result['events_per_sec']:,.0f}"
+              f" vs baseline {base['events_per_sec']:,.0f} events/s "
+              f"(floor {floor:,.0f} at -{args.tolerance:.0%}) -> {verdict}")
+        if verdict == "REGRESSED":
+            return 2
     return 0
 
 

@@ -3,12 +3,14 @@
 Public surface:
   * ClusterSimulator — the event loop (cluster.py)
   * RequestRecord    — the per-request result row (events.py)
+  * RecordArray      — the columnar record sink ``run()`` returns
+                       (events.py; quacks like list[RequestRecord])
   * BatchingConfig   — batching-aware container mode (router.py)
   * policies         — placement / keep-alive / scaling / cold-start
                        policy classes
 """
 from repro.core.cluster.cluster import ClusterSimulator
-from repro.core.cluster.events import RequestRecord
+from repro.core.cluster.events import RecordArray, RequestRecord
 from repro.core.cluster.policies import (AdaptiveTTL, ColdStartPolicy,
                                          FixedTTL, FullCold, LambdaImplicit,
                                          LayeredPool, LeastLoadedPlacement,
@@ -17,7 +19,8 @@ from repro.core.cluster.policies import (AdaptiveTTL, ColdStartPolicy,
                                          SnapshotRestore)
 from repro.core.cluster.router import BatchingConfig
 
-__all__ = ["ClusterSimulator", "RequestRecord", "BatchingConfig",
+__all__ = ["ClusterSimulator", "RequestRecord", "RecordArray",
+           "BatchingConfig",
            "AdaptiveTTL", "FixedTTL", "LambdaImplicit",
            "LeastLoadedPlacement", "LRUPlacement", "MRUPlacement",
            "PredictiveWarmPool", "ColdStartPolicy", "FullCold",

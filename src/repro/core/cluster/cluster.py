@@ -28,6 +28,8 @@ wall times land on the ``RequestRecord`` either way.
 """
 from __future__ import annotations
 
+from heapq import heappop, heappush
+from math import ceil as _ceil
 from typing import Optional, Union
 
 import numpy as np
@@ -35,22 +37,32 @@ import numpy as np
 from repro.core import billing, resources
 from repro.core.autoscaler import ARRIVAL_HISTORY_S
 from repro.core.cluster import events as ev
-from repro.core.cluster.events import EventQueue, RequestRecord
+from repro.core.cluster.events import EventQueue, RecordArray, RequestRecord
 from repro.core.cluster.policies import (ColdStartPolicy, FixedTTL, FullCold,
                                          KeepalivePolicy, LambdaImplicit,
-                                         PlacementPolicy, ScalingPolicy,
-                                         make_coldstart, make_keepalive,
-                                         make_placement, make_scaling,
-                                         warm_exec_estimate)
+                                         MRUPlacement, PlacementPolicy,
+                                         ScalingPolicy, make_coldstart,
+                                         make_keepalive, make_placement,
+                                         make_scaling)
 from repro.core.cluster.router import BarePool, BatchingConfig, Fleet, Router
 from repro.core.container import Container, Phase, State
 from repro.core.function import FunctionSpec, Handler
 from repro.core.workload import Request
 from repro.serving.batcher import PendingRequest
 
-REQUEUE = "requeue"         # throttled arrival re-entering the loop
-BATCH_RETRY = "batch_retry"  # throttled formed batch retrying as a unit
+REQUEUE = ev.REQUEUE          # throttled arrival re-entering the loop
+BATCH_RETRY = ev.BATCH_RETRY  # throttled formed batch retrying as a unit
 _ARRIVAL_HISTORY_S = ARRIVAL_HISTORY_S  # arrival history fleets retain
+
+# hot-loop constants (locals beat module attribute walks in the event loop)
+_NET_S = resources.NETWORK_OVERHEAD_S
+_TICK_S = billing.TICK_S
+_NEG_INF = float("-inf")
+_EMPTY: dict = {}
+# pre-drawn jitter factors per refill; one lognormal(0, jitter) block drawn
+# from the same generator IS the sequential scalar stream (numpy Generator
+# array fills use the per-value sampler), so parity holds draw for draw
+_JIT_CHUNK = 4096
 
 # sentinel distinguishing "axis kwarg omitted" from an explicitly passed
 # default, so the stack=-conflict guard sees every explicit argument
@@ -143,6 +155,8 @@ class ClusterSimulator:
         fleets = {name: Fleet(name, spec, batch_by_fleet.get(name))
                   for name, spec in specs.items()}
         self.router = Router(fleets, default=next(iter(fleets)))
+        self._fleets = fleets                       # hot-path alias
+        self._default_fleet = fleets[self.router.default]
 
         self.placement: PlacementPolicy = make_placement(placement)
         self.keepalive: KeepalivePolicy = make_keepalive(
@@ -158,11 +172,20 @@ class ClusterSimulator:
         self._lazy_evict = not isinstance(self.keepalive, FixedTTL)
         self._track_arrivals = not isinstance(self.scaling, LambdaImplicit)
         self._phased = not isinstance(self.coldstart, FullCold)
+        # more hot-path specializations, all behaviour-neutral: a constant
+        # TTL is read without a method call, FixedTTL's no-op gap observer
+        # is skipped, and exact-type MRU placement inlines to max()
+        self._ttl_const = (self.keepalive.ttl_s
+                           if type(self.keepalive) is FixedTTL else None)
+        self._observe_gaps = type(self.keepalive) is not FixedTTL
+        self._mru = type(self.placement) is MRUPlacement
+        self._jit_buf = None       # pre-drawn lognormal jitter factors
+        self._jit_pos = 0
         self.jitter = jitter
         self.max_containers = max_containers
         self.concurrency = max(1, int(concurrency))
         self.contention = contention
-        self.records: list[RequestRecord] = []
+        self.records = RecordArray()
         self.prewarms = 0
         self.events = 0            # loop iterations (simloop_bench reads it)
         self._active_n = 0         # O(1) live-container count across fleets
@@ -196,14 +219,22 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------ util
     def _jit(self, x: float) -> float:
+        """``x`` scaled by one lognormal(0, jitter) draw.
+
+        Draws come from a pre-drawn block refilled ``_JIT_CHUNK`` at a time:
+        a numpy ``Generator`` array fill consumes the bit stream exactly
+        like the same number of scalar calls, so the factors — and every
+        record derived from them — are bit-identical to the pre-buffering
+        scalar path (pinned by the PR-1 goldens)."""
         if self.jitter <= 0:
             return x
-        return float(x * self.rng.lognormal(0.0, self.jitter))
-
-    def _service_time(self, fleet: Fleet) -> float:
-        h = fleet.spec.handler
-        return self._jit(resources.exec_time(h.base_cpu_seconds,
-                                             fleet.spec.memory_mb))
+        buf, i = self._jit_buf, self._jit_pos
+        if buf is None or i >= _JIT_CHUNK:
+            buf = self._jit_buf = self.rng.lognormal(0.0, self.jitter,
+                                                     _JIT_CHUNK)
+            i = 0
+        self._jit_pos = i + 1
+        return float(x * buf[i])
 
     def _active_total(self) -> int:
         """Live containers across all fleets — an O(1) counter maintained by
@@ -259,22 +290,12 @@ class ClusterSimulator:
 
     def _cold_setup(self, q: EventQueue, fleet: Fleet, c: Container,
                     t: float) -> tuple:
-        """Charge the container's remaining cold phases.  FullCold keeps the
-        pre-refactor collapsed step (identical RNG call, no extra events —
-        the bit-parity contract) while still recording an analytic per-phase
-        split that sums exactly to the collapsed total; every other policy
-        plans the remaining phases and walks them with PHASE_DONE events."""
-        if not self._phased:
-            bd = c.cold_breakdown()
-            setup = self._jit(bd.total_s)
-            factor = setup / bd.total_s if bd.total_s > 0 else 0.0
-            prov = bd.provision_s * factor
-            boot = bd.bootstrap_s * factor
-            walls = {Phase.PROVISION: prov, Phase.BOOTSTRAP: boot,
-                     Phase.LOAD: setup - prov - boot}
-            for ph, w in walls.items():
-                c.mark_done(ph, w)
-            return setup, walls
+        """Charge the container's remaining cold phases with PHASE_DONE
+        events.  Only reached under a phased (non-FullCold) coldstart
+        policy: FullCold's collapsed single-step path — identical RNG call,
+        no extra events, the bit-parity contract — lives inline in
+        ``_dispatch``, which computes the analytic per-phase split there
+        without building a walls dict."""
         plan = self.coldstart.plan(fleet.spec, c)
         return self._schedule_phases(q, fleet.name, c, t, plan)
 
@@ -344,33 +365,79 @@ class ClusterSimulator:
         return "full"
 
     # ------------------------------------------------------------------- run
-    def run(self, requests: list) -> list[RequestRecord]:
+    def run(self, requests: list) -> RecordArray:
+        """Serve ``requests``; returns the (columnar) record sink.
+
+        Arrival fast path: every trace generator emits requests in arrival
+        order, so instead of heaping a million arrivals the loop merges the
+        sorted request list against the (small) heap of dynamic events.
+        The merge preserves the old tie-breaking exactly — arrivals used to
+        be pushed before any dynamic event existed, so their sequence
+        numbers were lower and an arrival won every same-timestamp tie;
+        here the merge pops the arrival whenever ``arrival_s <= head``.
+        An unsorted trace falls back to heaping arrivals as before.
+        """
         q = EventQueue()
-        for r in requests:
-            q.push(r.arrival_s, ev.ARRIVAL, r)
+        heap = q._heap
+        arr = requests if isinstance(requests, list) else list(requests)
+        n_arr = len(arr)
+        last = _NEG_INF
+        merged = True
+        for r in arr:
+            a = r.arrival_s
+            if a < last:
+                merged = False
+                break
+            last = a
+        ai = 0
+        if not merged:                    # rare: unsorted trace, old path
+            for r in arr:
+                q.push(r.arrival_s, ev.ARRIVAL, r)
+            ai = n_arr
         if self.pool is not None and not self.pool.sandboxes:
             for _ in range(self.coldstart.pool_size):   # initial pool fill
                 self._spawn_pool_sandbox(q, 0.0)
 
+        on_arrival = self._on_arrival
+        on_complete = self._on_complete
+        on_expire = self._on_expire
+        COMPLETE, EXPIRE, ARRIVAL = ev.COMPLETE, ev.EXPIRE, ev.ARRIVAL
+        PREWARM_READY, FLUSH, PHASE_DONE = (ev.PREWARM_READY, ev.FLUSH,
+                                            ev.PHASE_DONE)
+        events = self.events
         t = 0.0
-        while q:
-            t, _, kind, payload = q.pop()
-            self.events += 1
-            if kind == ev.COMPLETE:
-                self._on_complete(t, payload)
-            elif kind == ev.EXPIRE:
-                self._on_expire(q, t, payload)
-            elif kind == ev.PREWARM_READY:
-                self._on_prewarm_ready(q, t, payload)
-            elif kind == ev.FLUSH:
-                self._on_flush(q, t, payload)
-            elif kind == ev.PHASE_DONE:
-                self._on_phase_done(q, t, payload)
+        while True:
+            if ai < n_arr:
+                r = arr[ai]
+                ta = r.arrival_s
+                if not heap or ta <= heap[0][0]:
+                    ai += 1
+                    t = ta
+                    events += 1
+                    on_arrival(q, ta, r, True)
+                    continue
+            elif not heap:
+                break
+            item = heappop(heap)
+            t = item[0]
+            kind = item[2]
+            events += 1
+            if kind == COMPLETE:
+                on_complete(t, item[3])
+            elif kind == EXPIRE:
+                on_expire(q, t, item[3])
+            elif kind == PREWARM_READY:
+                self._on_prewarm_ready(q, t, item[3])
+            elif kind == FLUSH:
+                self._on_flush(q, t, item[3])
+            elif kind == PHASE_DONE:
+                self._on_phase_done(q, t, item[3])
             elif kind == BATCH_RETRY:
-                fname, reqs = payload
-                self._dispatch(q, self.fleets[fname], t, reqs)
+                fname, reqs = item[3]
+                self._dispatch(q, self._fleets[fname], t, reqs)
             else:  # ARRIVAL / REQUEUE
-                self._on_arrival(q, t, payload, fresh=(kind == ev.ARRIVAL))
+                on_arrival(q, t, item[3], kind == ARRIVAL)
+        self.events = events
         self._finalize(t)
         return self.records
 
@@ -390,25 +457,28 @@ class ClusterSimulator:
     # ------------------------------------------------------------- complete
     def _on_complete(self, t: float, payload) -> None:
         fname, cid, end = payload
-        fleet = self.fleets[fname]
-        ends = fleet.inflight_ends.get(cid)
+        fleet = self._fleets[fname]
+        inflight_ends = fleet.inflight_ends
+        ends = inflight_ends.get(cid)
         if ends:
             ends.remove(end)
             if not ends:
-                del fleet.inflight_ends[cid]
+                del inflight_ends[cid]
         c = fleet.containers[cid]
-        if fleet.inflight(cid) == 0 and c.state != State.EVICTED:
+        if cid not in inflight_ends and c.state is not State.EVICTED:
             c.state = State.WARM
             fleet.idle.append((t, cid))
 
     # --------------------------------------------------------------- expire
     def _on_expire(self, q: EventQueue, t: float, payload) -> None:
         fname, cid = payload
-        fleet = self.fleets[fname]
+        fleet = self._fleets[fname]
         c = fleet.containers.get(cid)
-        if not c or c.state != State.WARM:
+        if c is None or c.state is not State.WARM:
             return
-        ttl = self.keepalive.ttl(fname)
+        ttl = self._ttl_const
+        if ttl is None:
+            ttl = self.keepalive.ttl(fname)
         if t - c.last_used_at >= ttl - 1e-9:
             self._evict(fleet, cid)
         else:
@@ -437,7 +507,7 @@ class ClusterSimulator:
             return
         n = self.scaling.prewarm_count(
             now=t, arrivals=fleet.arrivals,
-            warm_exec_s=warm_exec_estimate(fleet.spec),
+            warm_exec_s=fleet.warm_exec_s,
             active=fleet.active_count())
         for _ in range(n):
             if self.max_containers and \
@@ -448,7 +518,7 @@ class ClusterSimulator:
             fleet.pending_prewarms += 1
             self.prewarms += 1
             if not self._phased:
-                setup = self._jit(c.cold_breakdown().total_s)
+                setup = self._jit(fleet.cold_total_s)
                 fleet.prewarm_etas.append(t + setup)
                 q.push(t + setup, ev.PREWARM_READY, (fleet.name, c.cid))
             else:
@@ -462,11 +532,18 @@ class ClusterSimulator:
     # -------------------------------------------------------------- arrival
     def _on_arrival(self, q: EventQueue, t: float, req: Request,
                     fresh: bool) -> None:
-        fleet = self.router.route(req)
+        fn = req.fn
+        if not fn:
+            fleet = self._default_fleet
+        else:
+            fleet = self._fleets.get(fn)
+            if fleet is None:
+                fleet = self.router.route(req)    # raises the nice KeyError
         if fresh:
-            if fleet.last_arrival_s is not None:
-                self.keepalive.observe_gap(fleet.name,
-                                           t - fleet.last_arrival_s)
+            last = fleet.last_arrival_s
+            if last is not None and self._observe_gaps:
+                # FixedTTL's observer is a no-op; skip the call entirely
+                self.keepalive.observe_gap(fleet.name, t - last)
             fleet.last_arrival_s = t
             if self._track_arrivals:
                 fleet.arrivals.append(t)
@@ -485,7 +562,7 @@ class ClusterSimulator:
                 self._schedule_flush(q, fleet)
             return
 
-        self._dispatch(q, fleet, t, [req])
+        self._dispatch(q, fleet, t, (req,))
 
     # ---------------------------------------------------------------- flush
     def _schedule_flush(self, q: EventQueue, fleet: Fleet) -> None:
@@ -521,7 +598,11 @@ class ClusterSimulator:
     def _candidates(self, fleet: Fleet, now: float) -> list:
         if self._lazy_evict:
             self._lazy_evict_stale(fleet, now)
-        fleet.prune_idle()
+        if fleet.idle_stale:
+            # only an eviction can leave a non-WARM cid in the idle list;
+            # while the flag is clear the old unconditional rebuild was a
+            # per-dispatch no-op (the hot loop's biggest allocation)
+            fleet.prune_idle()
         if self.concurrency <= 1:
             return fleet.idle
         return [(c.last_used_at, cid) for cid in fleet.live
@@ -533,19 +614,30 @@ class ClusterSimulator:
                   reqs: list) -> None:
         """Place ``reqs`` (a single request, or one formed batch) on a warm
         container or cold-start one, honoring the shared container cap."""
-        inflight = ({cid: fleet.inflight(cid) for cid in fleet.live}
-                    if (self.concurrency > 1 or self.placement.needs_inflight)
-                    else {})
+        concurrency = self.concurrency
+        if concurrency > 1 or self.placement.needs_inflight:
+            inflight = {cid: fleet.inflight(cid) for cid in fleet.live}
+        else:
+            inflight = _EMPTY
         cands = self._candidates(fleet, t)
         chosen: Optional[Container] = None
         cold = claimed = False
-        cid = self.placement.choose(cands, inflight) if cands else None
+        if not cands:
+            cid = None
+        elif self._mru:
+            cid = max(cands)[1]            # MRUPlacement.choose, inlined
+        else:
+            cid = self.placement.choose(cands, inflight)
         if cid is not None:
             chosen = fleet.containers[cid]
-            fleet.idle = [(ts, i) for ts, i in fleet.idle if i != cid]
+            idle = fleet.idle
+            for j, entry in enumerate(idle):
+                if entry[1] == cid:        # cids are unique in idle
+                    del idle[j]
+                    break
         else:
             if self.max_containers and \
-                    self._active_total() >= self.max_containers:
+                    self._active_n >= self.max_containers:
                 if not self._make_room(q, fleet, t, reqs):
                     return                      # requeued behind a busy slot
             chosen = self.pool.claim(t) if self.pool is not None else None
@@ -563,18 +655,43 @@ class ClusterSimulator:
                 chosen = Container(fleet.spec, created_at=t)
                 fleet.cold_starts += 1
             self._add_container(fleet, chosen)
+        ccid = chosen.cid
 
         # ---- timing: exec draw first, then cold-setup draw (RNG parity)
-        exec_s = self._service_time(fleet)
+        exec_s = self._jit(fleet.warm_exec_s)
         b = len(reqs)
         if b > 1:
             exec_s *= 1.0 + fleet.batching.amortization * (b - 1)
-        k = fleet.inflight(chosen.cid) + 1
-        if k > 1:
-            exec_s *= 1.0 + self.contention * (k - 1)
-        walls: dict = {}
+        if concurrency > 1:
+            # with concurrency 1 a dispatch target never has work in
+            # flight (idle or freshly created), so k == 1 always
+            k = fleet.inflight(ccid) + 1
+            if k > 1:
+                exec_s *= 1.0 + self.contention * (k - 1)
+        prov = boot = load = rest = 0.0
+        kind = ""
         if cold or claimed:
-            setup, walls = self._cold_setup(q, fleet, chosen, t)
+            if not self._phased:
+                # collapsed FullCold fast path: one jitter draw over the
+                # cached per-fleet anatomy, no walls dict, no PHASE_DONE
+                bd = fleet.cold_bd
+                total = fleet.cold_total_s
+                setup = self._jit(total)
+                factor = setup / total if total > 0 else 0.0
+                prov = bd.provision_s * factor
+                boot = bd.bootstrap_s * factor
+                load = setup - prov - boot
+                chosen.mark_done(Phase.PROVISION, prov)
+                chosen.mark_done(Phase.BOOTSTRAP, boot)
+                chosen.mark_done(Phase.LOAD, load)
+                kind = "full"
+            else:
+                setup, walls = self._cold_setup(q, fleet, chosen, t)
+                prov = walls.get(Phase.PROVISION, 0.0)
+                boot = walls.get(Phase.BOOTSTRAP, 0.0)
+                load = walls.get(Phase.LOAD, 0.0)
+                rest = walls.get(Phase.RESTORE, 0.0)
+                kind = self._cold_kind(walls)
             start = t + setup
             chosen.ready_at = start
             if claimed:            # keep the shared pool at standing size
@@ -582,35 +699,49 @@ class ClusterSimulator:
         else:
             # a concurrency > 1 follow-up placed on a still-provisioning
             # container queues until the cold start finishes
-            start = max(t, chosen.ready_at)
-        end = start + exec_s + resources.NETWORK_OVERHEAD_S
+            ra = chosen.ready_at
+            start = t if t >= ra else ra
+        end = start + exec_s + _NET_S
 
         chosen.state = State.BUSY
         # max(): with concurrency > 1 a later, shorter request must not move
         # the container's recency backwards past a still-running one
-        chosen.last_used_at = max(chosen.last_used_at, end)
+        if end > chosen.last_used_at:
+            chosen.last_used_at = end
         chosen.invocations += b
-        fleet.inflight_ends.setdefault(chosen.cid, []).append(end)
-        q.push(end, ev.COMPLETE, (fleet.name, chosen.cid, end))
-        self._schedule_expire(q, fleet, chosen.cid,
-                              end + self.keepalive.ttl(fleet.name))
+        ends = fleet.inflight_ends.get(ccid)
+        if ends is None:
+            ends = fleet.inflight_ends[ccid] = []
+        ends.append(end)
+        fname = fleet.name
+        heap, seq = q._heap, q._seq
+        heappush(heap, (end, next(seq), ev.COMPLETE, (fname, ccid, end)))
+        ttl = self._ttl_const
+        if ttl is None:
+            ttl = self.keepalive.ttl(fname)
+        deadline = end + ttl
+        if deadline > fleet.expire_sched.get(ccid, _NEG_INF):
+            fleet.expire_sched[ccid] = deadline
+            heappush(heap, (deadline, next(seq), ev.EXPIRE, (fname, ccid)))
 
         # ---- billing + records (batch wall time amortized per request)
         share = exec_s / b
-        cost = billing.invocation_cost(share, fleet.spec.memory_mb)
-        kind = self._cold_kind(walls) if (cold or claimed) else ""
-        for req in reqs:
-            self.records.append(RequestRecord(
-                rid=req.rid, arrival_s=req.arrival_s, start_exec_s=start,
-                end_s=end, cold=cold, prediction_s=exec_s,
-                exec_s=share if b > 1 else exec_s, cost=cost,
-                container_id=chosen.cid, memory_mb=fleet.spec.memory_mb,
-                tag=req.tag, fn=fleet.name, batch_size=b,
-                cold_kind=kind,
-                provision_s=walls.get(Phase.PROVISION, 0.0),
-                bootstrap_s=walls.get(Phase.BOOTSTRAP, 0.0),
-                load_s=walls.get(Phase.LOAD, 0.0),
-                restore_s=walls.get(Phase.RESTORE, 0.0)))
+        ticks = _ceil(share / _TICK_S)      # billing.billed_ticks, inlined
+        if ticks < 1:
+            ticks = 1
+        cost = ticks * fleet.price_100ms
+        mem = fleet.spec.memory_mb
+        append_row = self.records.append_row
+        if b == 1:
+            req = reqs[0]
+            append_row((req.rid, req.arrival_s, start, end, cold, exec_s,
+                        exec_s, cost, ccid, mem, req.tag, fname, 1, kind,
+                        prov, boot, load, rest))
+        else:
+            for req in reqs:
+                append_row((req.rid, req.arrival_s, start, end, cold,
+                            exec_s, share, cost, ccid, mem, req.tag, fname,
+                            b, kind, prov, boot, load, rest))
 
     # ------------------------------------------------------------ throttling
     def _make_room(self, q: EventQueue, fleet: Fleet, t: float,

@@ -6,6 +6,22 @@ in push order.  This is the exact discipline of the original monolithic
 ``Simulator.run()`` — preserving it (one shared sequence counter, arrivals
 pushed first, completion before expiry at dispatch) is what makes the default
 policy stack reproduce the old records bit-for-bit.
+
+Hot-path notes (the PR-5 fast-path work):
+
+  * Event kinds are small integers, not strings — the run loop compares the
+    popped kind against per-kind constants a few million times per bench
+    run, and ints keep that a pointer-free compare.  The names below are
+    the API; nothing may depend on the concrete values.
+  * ``RequestRecord`` carries ``slots=True``: a million-record run used to
+    spend a measurable slice of its wall time building per-record
+    ``__dict__``s.
+  * ``RecordArray`` is the columnar (struct-of-arrays) record sink the
+    simulator appends plain field tuples into.  It quacks like the
+    ``list[RequestRecord]`` it replaces — iteration, indexing, equality —
+    materializing ``RequestRecord`` views lazily, while ``column()`` /
+    ``response_s()`` hand the metrics layer whole numpy arrays without
+    ever constructing a million dataclasses.
 """
 from __future__ import annotations
 
@@ -13,23 +29,33 @@ import dataclasses
 import heapq
 import itertools
 
-# event kinds --------------------------------------------------------------
-ARRIVAL = "arrival"            # a workload Request reaches the router
-COMPLETE = "complete"          # a container finishes a request (or batch)
-EXPIRE = "expire"              # keep-alive deadline check for a container
-PREWARM_READY = "prewarm_ready"  # a predictively-provisioned container warms
-FLUSH = "flush"                # a batching fleet's max_wait deadline
-PHASE_DONE = "phase_done"      # a container finishes one cold-start phase
+import numpy as np
+
+# event kinds (int-valued; compare against the names, never the values) ----
+ARRIVAL = 0        # a workload Request reaches the router
+COMPLETE = 1       # a container finishes a request (or batch)
+EXPIRE = 2         # keep-alive deadline check for a container
+PREWARM_READY = 3  # a predictively-provisioned container warms
+FLUSH = 4          # a batching fleet's max_wait deadline
+PHASE_DONE = 5     # a container finishes one cold-start phase
+REQUEUE = 6        # throttled arrival re-entering the loop
+BATCH_RETRY = 7    # throttled formed batch retrying as a unit
 
 
 class EventQueue:
-    """Min-heap of ``(time, seq, kind, payload)`` with a shared seq counter."""
+    """Min-heap of ``(time, seq, kind, payload)`` with a shared seq counter.
+
+    The run loop reaches into ``_heap`` directly (bound to a local) — the
+    push/pop methods remain for every non-hot call site.
+    """
+
+    __slots__ = ("_heap", "_seq")
 
     def __init__(self):
         self._heap: list = []
         self._seq = itertools.count()
 
-    def push(self, t: float, kind: str, payload) -> None:
+    def push(self, t: float, kind: int, payload) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
 
     def pop(self):
@@ -42,7 +68,7 @@ class EventQueue:
         return bool(self._heap)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class RequestRecord:
     """One served request — the unit every metric/SLA report consumes.
 
@@ -82,3 +108,117 @@ class RequestRecord:
     @property
     def response_s(self) -> float:
         return self.end_s - self.arrival_s
+
+
+#: RequestRecord field order — the row layout RecordArray stores.
+RECORD_FIELDS = tuple(f.name for f in dataclasses.fields(RequestRecord))
+_FIELD_INDEX = {name: i for i, name in enumerate(RECORD_FIELDS)}
+_TAG_I = _FIELD_INDEX["tag"]
+#: fields whose columns are numeric (float-convertible) arrays
+_NUMERIC_FIELDS = frozenset(RECORD_FIELDS) - {"tag", "fn", "cold_kind"}
+
+
+class RecordArray:
+    """Columnar record sink behind the ``list[RequestRecord]`` API.
+
+    The simulator appends one plain tuple per served request (field order
+    ``RECORD_FIELDS``); consumers that iterate or index get lazily
+    materialized ``RequestRecord`` dataclasses, so existing code — golden
+    digests, SLA evaluation, report filters — reads records exactly as
+    before.  Consumers that know about columns (``repro.core.metrics``)
+    call ``column()`` / ``response_s()`` and get numpy arrays straight
+    from the rows, skipping per-record object construction entirely.
+
+    ``tags_seen`` tracks the distinct ``tag`` values appended so far, so a
+    summary can prove "nothing here needs dropping" without scanning a
+    million rows.
+    """
+
+    __slots__ = ("_rows", "tags_seen", "_colcache")
+
+    def __init__(self, rows: list | None = None):
+        self._rows: list = list(rows) if rows else []
+        self.tags_seen: set = {r[_TAG_I] for r in self._rows}
+        # column cache: name -> (row_count, array); consumers like
+        # ``metrics.summarize`` hit the same columns several times per
+        # report (full/warm/cold summaries), and rebuilding a
+        # million-element array per summary was measurable.  Stale entries
+        # are detected by row count (rows are append-only).
+        self._colcache: dict = {}
+
+    # ------------------------------------------------------------- sink side
+    def append_row(self, row: tuple) -> None:
+        self._rows.append(row)
+        self.tags_seen.add(row[_TAG_I])
+
+    def append(self, record: RequestRecord) -> None:
+        """list-API compat: append a materialized record."""
+        self.append_row(dataclasses.astuple(record))
+
+    # ----------------------------------------------------------- list facade
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __bool__(self) -> bool:
+        return bool(self._rows)
+
+    def __iter__(self):
+        for row in self._rows:
+            yield RequestRecord(*row)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [RequestRecord(*row) for row in self._rows[i]]
+        return RequestRecord(*self._rows[i])
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, RecordArray):
+            return self._rows == other._rows
+        if isinstance(other, list):
+            return len(self._rows) == len(other) and \
+                all(RequestRecord(*row) == r
+                    for row, r in zip(self._rows, other))
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"RecordArray(n={len(self._rows)})"
+
+    # --------------------------------------------------------- columnar side
+    def column(self, name: str) -> np.ndarray:
+        """One field across all records, as a numpy array (float64 for
+        numeric fields, object for the string fields).  Built once per
+        (column, row count) and cached."""
+        n = len(self._rows)
+        hit = self._colcache.get(name)
+        if hit is not None and hit[0] == n:
+            return hit[1]
+        i = _FIELD_INDEX[name]
+        rows = self._rows
+        if name in _NUMERIC_FIELDS:
+            col = np.fromiter((row[i] for row in rows), dtype=np.float64,
+                              count=n)
+        else:
+            col = np.array([row[i] for row in rows], dtype=object)
+        self._colcache[name] = (n, col)
+        return col
+
+    def response_s(self) -> np.ndarray:
+        """``end_s - arrival_s`` for every record, vectorized (cached like
+        a column)."""
+        n = len(self._rows)
+        hit = self._colcache.get("response_s")
+        if hit is not None and hit[0] == n:
+            return hit[1]
+        col = self.column("end_s") - self.column("arrival_s")
+        self._colcache["response_s"] = (n, col)
+        return col
+
+    def keep_mask(self, drop_tags: tuple = ()) -> np.ndarray | None:
+        """Boolean keep-mask for ``tag not in drop_tags``, or ``None`` when
+        no row carries a dropped tag (the common fast path — proven from
+        ``tags_seen`` without scanning)."""
+        dropped = self.tags_seen.intersection(drop_tags)
+        if not dropped:
+            return None
+        return np.fromiter((row[_TAG_I] not in drop_tags for row in self._rows),
+                           dtype=bool, count=len(self._rows))

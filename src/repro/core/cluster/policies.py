@@ -99,6 +99,32 @@ class LeastLoadedPlacement(PlacementPolicy):
                    key=lambda c: (inflight.get(c[1], 0), -c[0], -c[1]))[1]
 
 
+def _percentile_linear(values: list, pct: float) -> float:
+    """``float(np.percentile(values, pct))`` (default 'linear' method),
+    bit-exactly, without the numpy call overhead.
+
+    Replicates numpy's arithmetic step for step so cached adaptive TTLs
+    match the pre-cache ones to the last ulp (the suite reports are pinned
+    byte-identical across this change): the 'linear' method's virtual
+    index is ``(n - 1) * (pct / 100)`` and interpolation follows numpy's
+    ``_lerp`` two-branch form (``t >= 0.5`` interpolates from the right).
+    """
+    sv = sorted(values)
+    n = len(sv)
+    virtual = (n - 1) * (pct / 100.0)
+    if virtual <= 0.0:
+        return float(sv[0])
+    if virtual >= n - 1:
+        return float(sv[-1])
+    j = int(virtual)
+    g = virtual - j
+    a, b = sv[j], sv[j + 1]
+    diff = b - a
+    if g < 0.5:
+        return float(a + diff * g)
+    return float(b - diff * (1.0 - g))
+
+
 # ------------------------------------------------------------------ keepalive
 class KeepalivePolicy:
     """TTL source; the cluster schedules/evaluates expiry deadlines with it."""
@@ -164,19 +190,34 @@ class AdaptiveTTL(KeepalivePolicy):
         self.max_ttl_s = max_ttl_s
         self.window = window
         self._gaps: dict[str, list] = {}
+        self._ttl_cache: dict[str, float] = {}
 
     def observe_gap(self, fn: str, gap_s: float) -> None:
         gaps = self._gaps.setdefault(fn, [])
         gaps.append(gap_s)
         if len(gaps) > self.window:
             del gaps[0]
+        self._ttl_cache.pop(fn, None)
 
     def ttl(self, fn: str = "") -> float:
+        """Current TTL for ``fn``.  The event loop asks per dispatch and
+        per expiry check, so the percentile is computed once per new gap
+        observation (cached) with a scalar replication of
+        ``np.percentile(gaps, p)`` — calling numpy on a <=256-element list
+        a few times per event dominated adaptive-stack sweeps."""
         gaps = self._gaps.get(fn)
         if not gaps:
             return self.base_ttl_s
-        t = float(np.percentile(gaps, self.percentile)) * self.margin
-        return float(np.clip(t, self.min_ttl_s, self.max_ttl_s))
+        t = self._ttl_cache.get(fn)
+        if t is None:
+            t = _percentile_linear(gaps, self.percentile) * self.margin
+            # np.clip semantics for finite scalars
+            if t < self.min_ttl_s:
+                t = self.min_ttl_s
+            elif t > self.max_ttl_s:
+                t = self.max_ttl_s
+            self._ttl_cache[fn] = t = float(t)
+        return t
 
 
 # -------------------------------------------------------------------- scaling

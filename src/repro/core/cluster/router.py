@@ -19,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.container import Container, State
+from repro.core import billing, resources
+from repro.core.container import Container, State, cold_start_breakdown
 from repro.core.function import FunctionSpec
 from repro.serving.batcher import Batcher
 
@@ -61,6 +62,18 @@ class Fleet:
         self.pending_prewarms = 0
         self.cold_starts = 0
         self.evictions = 0
+        # ---- hot-path caches: all three are pure functions of the spec,
+        # recomputed per event before PR 5 (the sim loop's most-repeated
+        # redundant work after _active_total)
+        self.warm_exec_s = resources.exec_time(spec.handler.base_cpu_seconds,
+                                               spec.memory_mb)
+        self.cold_bd = cold_start_breakdown(spec)
+        self.cold_total_s = self.cold_bd.total_s
+        self.price_100ms = billing.price_per_100ms(spec.memory_mb)
+        # set on evict(): the idle list may hold a dead cid, so the next
+        # _candidates call must prune.  While clear, idle holds only WARM
+        # containers and pruning is skipped (the common case).
+        self.idle_stale = False
 
     # ------------------------------------------------------------------
     def add_container(self, c: Container) -> None:
@@ -71,6 +84,7 @@ class Fleet:
         self.containers[cid].state = State.EVICTED
         self.live.discard(cid)
         self.evictions += 1
+        self.idle_stale = True
 
     def active_count(self) -> int:
         """Containers that occupy cluster capacity.  Provisioning prewarms
@@ -81,6 +95,7 @@ class Fleet:
     def prune_idle(self) -> None:
         self.idle = [(ts, cid) for ts, cid in self.idle
                      if self.containers[cid].state == State.WARM]
+        self.idle_stale = False
 
     def inflight(self, cid: int) -> int:
         return len(self.inflight_ends.get(cid, ()))

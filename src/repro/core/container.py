@@ -92,7 +92,7 @@ PROVISION_BASE_S = 0.9
 PROVISION_TIER_S = 0.55   # divided by cpu_share
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ColdStartBreakdown:
     provision_s: float
     bootstrap_s: float
@@ -119,7 +119,7 @@ def cold_start_breakdown(spec: FunctionSpec) -> ColdStartBreakdown:
     )
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Container:
     spec: FunctionSpec
     created_at: float

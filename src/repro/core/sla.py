@@ -22,7 +22,12 @@ class SLA:
     p99_s: float = float("inf")
 
     def evaluate(self, records) -> dict:
-        lat = np.array([r.response_s for r in records]) if records else np.zeros(1)
+        if not records:
+            lat = np.zeros(1)
+        elif hasattr(records, "response_s"):
+            lat = records.response_s()     # columnar RecordArray fast path
+        else:
+            lat = np.array([r.response_s for r in records])
         obs = {"p50": float(np.percentile(lat, 50)),
                "p95": float(np.percentile(lat, 95)),
                "p99": float(np.percentile(lat, 99))}

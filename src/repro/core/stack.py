@@ -426,7 +426,11 @@ def run_stack(specs, trace, stack: PolicyStack, *, seed: int = 0, sla=None,
            "mitigation_per_1k": mit_per_1k,
            "evictions": sim.evictions, "prewarms": sim.prewarms}
     if sla is not None:
-        ev = sla.evaluate([r for r in recs if r.tag != "prime"])
+        if "prime" not in recs.tags_seen:
+            kept = recs                 # columnar fast path (no filtering)
+        else:
+            kept = [r for r in recs if r.tag != "prime"]
+        ev = sla.evaluate(kept)
         row["sla"] = ev["sla"]
         row["sla_ok"] = ev["ok"]
         row["sla_violations"] = sorted(k for k, v in ev["violations"].items()
@@ -579,3 +583,96 @@ class ExperimentResult:
                      f"{o['p95_s']:.3f}s -> {self.p95_s:.3f}s "
                      f"[{'WIN' if self.verdict['win'] else 'NO-WIN'}]")
         return line
+
+
+# ------------------------------------------------------ parallel sweep runner
+# Every ``run_stack`` call is an independent work unit by construction
+# (PR 4: stacks are frozen canonical values, policies materialize fresh per
+# run), so a grid sweep fans out over a process pool.  The worker-side
+# scenario context — deployed fleet + generated trace — is built ONCE per
+# (scenario, scale) per worker and cached, so a 128-point grid shares one
+# trace per worker instead of regenerating it per point.  Traces are
+# deterministic functions of (scenario, scale), which is what makes the
+# worker-built context identical to the parent's and the merged report
+# byte-identical to a serial run (pinned by tests/test_executor.py).
+
+_WORKER_CTX: dict = {}
+
+
+def _scenario_ctx(name: str, scale: float) -> tuple:
+    """(scenario, specs, trace) for one scenario at one trace scale, cached
+    per process.  Uses the suite's default platform (seed 0, fallback
+    calibration) — the one configuration workers can rebuild exactly."""
+    ctx = _WORKER_CTX.get((name, scale))
+    if ctx is None:
+        from repro.core import scenarios
+        from repro.core.platform import ServerlessPlatform
+        sc = scenarios.get(name)
+        platform = ServerlessPlatform(seed=0, use_fallback_calibration=True)
+        fleet_specs = sc.deploy(platform)
+        trace = sc.build_trace([s.name for s in fleet_specs], scale=scale)
+        _WORKER_CTX[(name, scale)] = ctx = (sc, fleet_specs, trace)
+    return ctx
+
+
+def _spec_row(spec: "ExperimentSpec") -> dict:
+    """Process-pool work unit: one ExperimentSpec -> one run_stack row."""
+    sc, fleet_specs, trace = _scenario_ctx(spec.scenario, spec.scale)
+    return run_stack(fleet_specs, trace, spec.stack, seed=spec.seed,
+                     sla=sc.sla, scenario=sc if spec.tuned else None)
+
+
+def run_specs(specs: Sequence, *, jobs: int = 1) -> list:
+    """Run ``ExperimentSpec`` work units, optionally in parallel.
+
+    Returns one ``run_stack`` row per spec, in input order.  ``jobs <= 1``
+    runs in-process; ``jobs > 1`` fans the pickled specs out over a
+    process pool (``fork`` start method where available, so workers
+    inherit ``sys.path``).  A worker exception propagates to the caller
+    immediately — a raising spec fails the sweep instead of hanging it.
+
+    Work units must name *registered* scenarios (workers resolve them via
+    ``repro.core.scenarios.get``); results merge back positionally, so
+    callers key rows by the spec's canonical ``PolicyStack`` equality.
+    """
+    specs = [s if isinstance(s, ExperimentSpec) else ExperimentSpec.from_dict(s)
+             for s in specs]
+    if jobs <= 1:
+        return [_spec_row(s) for s in specs]
+    with pool_executor(jobs) as pool:
+        return list(pool.map(_spec_row, specs))
+
+
+def pool_executor(jobs: int):
+    """The repo's standard sweep pool — one definition so every ``--jobs``
+    surface builds it identically.
+
+    Start method: ``fork`` while the parent is single-threaded (workers
+    inherit ``sys.path`` and loaded modules — the cheap, common case: the
+    suite CLI never starts threads because fallback calibration runs no
+    JAX computation), else ``spawn`` — forking a multithreaded parent
+    (e.g. after a JAX computation warmed its thread pools) can deadlock a
+    child on a lock the fork snapshotted mid-held.  Spawned workers
+    re-import this package, so the package root is propagated via
+    ``PYTHONPATH`` for children launched outside the documented
+    ``PYTHONPATH=src`` workflows."""
+    import concurrent.futures as cf
+    import multiprocessing as mp
+    import threading
+    method = "fork" if threading.active_count() == 1 else "spawn"
+    try:
+        mp_ctx = mp.get_context(method)
+    except ValueError:                      # platforms without fork at all
+        method = "spawn"                    # ... default to spawn semantics
+        mp_ctx = None
+    if method == "spawn":
+        # spawn workers are created lazily (after this returns), so the
+        # path must go through the parent's environ — a deliberately
+        # persistent, idempotent addition of the package root only
+        import os
+        import repro
+        src = os.path.dirname(next(iter(repro.__path__)))
+        pp = os.environ.get("PYTHONPATH", "")
+        if src not in pp.split(os.pathsep):
+            os.environ["PYTHONPATH"] = src + (os.pathsep + pp if pp else "")
+    return cf.ProcessPoolExecutor(max_workers=jobs, mp_context=mp_ctx)

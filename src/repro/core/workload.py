@@ -38,7 +38,7 @@ from typing import Iterator, Tuple
 import numpy as np
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Request:
     rid: int
     arrival_s: float
@@ -79,7 +79,82 @@ def step_ramp(start_rps: int = 10, step_rps: int = 10,
     return reqs
 
 
-def poisson(rate_rps: float, duration_s: float, seed: int = 0) -> list:
+# ---------------------------------------------------------------------------
+# Vectorized arrival sampling.
+#
+# The scalar generators below (``_poisson_scalar`` / ``_mmpp_bursty_scalar``)
+# draw one exponential per ``rng.exponential(scale)`` call; every such call
+# consumes the generator's bit stream exactly like one
+# ``rng.standard_exponential()`` draw scaled afterwards, and a numpy array
+# fill of size K consumes the stream exactly like K scalar draws.  So a
+# buffered block of ``standard_exponential`` values replayed one-per-draw is
+# *element-identical* to the scalar loop — including the final discarded
+# draw that crosses the window end — which is what lets the vectorized
+# generators below keep the seed discipline bit-for-bit
+# (tests/test_workload.py pins vectorized == scalar).
+#
+# ``diurnal`` and ``flash_crowd`` stay scalar: Lewis-Shedler thinning
+# interleaves one exponential (variable bit-stream consumption) with one
+# uniform per candidate, so no block draw can replay that stream without
+# changing the emitted values.  Their candidate counts are a few thousand
+# per trace — negligible next to the million-arrival Poisson traces.
+
+class _ExpStream:
+    """Buffered standard-exponential draws, replayed one per scalar
+    ``rng.exponential(scale)`` call the scalar reference would make."""
+
+    __slots__ = ("rng", "buf", "pos")
+
+    def __init__(self, rng):
+        self.rng = rng
+        self.buf = rng.standard_exponential(256)
+        self.pos = 0
+
+    def _refill(self, hint: int) -> None:
+        self.buf = self.rng.standard_exponential(max(256, hint))
+        self.pos = 0
+
+    def draw(self, scale: float) -> float:
+        """One draw — equals ``rng.exponential(scale)`` on the same stream."""
+        if self.pos >= len(self.buf):
+            self._refill(256)
+        v = scale * self.buf[self.pos]
+        self.pos += 1
+        return float(v)
+
+    def arrivals_until(self, start: float, end: float, scale: float) -> list:
+        """All arrival times of ``t += exp(scale)`` starting at ``start``
+        that fall strictly before ``end`` (the crossing draw is consumed
+        and discarded, exactly like the scalar loop's ``break``)."""
+        out: list = []
+        t = start
+        while True:
+            avail = self.buf[self.pos:]
+            if avail.size == 0:
+                expect = int((end - t) / scale * 1.2) + 64 if scale > 0 \
+                    else 256
+                self._refill(expect)
+                continue
+            # cumulative sum seeded with t reproduces the scalar loop's
+            # left-to-right float accumulation exactly
+            seq = np.empty(avail.size + 1)
+            seq[0] = t
+            np.multiply(avail, scale, out=seq[1:])
+            times = np.cumsum(seq)[1:]
+            idx = int(np.searchsorted(times, end, side="left"))
+            if idx == times.size:          # window end not reached yet
+                out.extend(times.tolist())
+                self.pos = len(self.buf)
+                t = float(times[-1])
+                continue
+            out.extend(times[:idx].tolist())
+            self.pos += idx + 1            # + the discarded crossing draw
+            return out
+
+
+def _poisson_scalar(rate_rps: float, duration_s: float,
+                    seed: int = 0) -> list:
+    """Pre-vectorization reference (the spec the fast path is pinned to)."""
     rng = np.random.default_rng(seed)
     t, rid, reqs = 0.0, 0, []
     while True:
@@ -89,6 +164,13 @@ def poisson(rate_rps: float, duration_s: float, seed: int = 0) -> list:
         reqs.append(Request(rid, float(t), "poisson"))
         rid += 1
     return reqs
+
+
+def poisson(rate_rps: float, duration_s: float, seed: int = 0) -> list:
+    scale = 1.0 / rate_rps
+    rng = np.random.default_rng(seed)
+    times = _ExpStream(rng).arrivals_until(0.0, duration_s, scale)
+    return [Request(rid, t, "poisson") for rid, t in enumerate(times)]
 
 
 def mmpp_bursty(*, rate_on_rps: float = 2.0, rate_off_rps: float = 0.02,
@@ -104,6 +186,30 @@ def mmpp_bursty(*, rate_on_rps: float = 2.0, rate_off_rps: float = 0.02,
     rates.  Requests are tagged ``"burst"`` inside ON dwells and ``"idle"``
     between them, so reports can split the regimes.
     """
+    if min(rate_on_rps, rate_off_rps) < 0:
+        raise ValueError("rates must be non-negative")
+    rng = np.random.default_rng(seed)
+    es = _ExpStream(rng)
+    arrivals: list = []
+    t, on = 0.0, start_on
+    while t < duration_s:
+        dwell = es.draw(mean_on_s if on else mean_off_s)
+        end = min(t + dwell, duration_s)
+        rate = rate_on_rps if on else rate_off_rps
+        if rate > 0:
+            tag = "burst" if on else "idle"
+            for tt in es.arrivals_until(t, end, 1.0 / rate):
+                arrivals.append((tt, tag))
+        t, on = end, not on
+    return [Request(rid, t, tag) for rid, (t, tag) in enumerate(arrivals)]
+
+
+def _mmpp_bursty_scalar(*, rate_on_rps: float = 2.0,
+                        rate_off_rps: float = 0.02, mean_on_s: float = 60.0,
+                        mean_off_s: float = 240.0, duration_s: float = 3600.0,
+                        seed: int = 0, start_on: bool = False) -> list:
+    """Pre-vectorization reference for ``mmpp_bursty`` (kept as the spec
+    the buffered-stream implementation is pinned against)."""
     if min(rate_on_rps, rate_off_rps) < 0:
         raise ValueError("rates must be non-negative")
     rng = np.random.default_rng(seed)
@@ -141,15 +247,21 @@ def diurnal(*, base_rps: float = 0.5, amplitude: float = 0.8,
     rate_max = base_rps * (1.0 + amplitude)
     if rate_max <= 0:
         return []
+    # stays scalar: thinning interleaves one exponential with one uniform
+    # per candidate, and the exponential's variable bit-stream consumption
+    # makes a block draw change the emitted values (see _ExpStream notes);
+    # candidate counts here are small, so only bind the hot methods
     rng = np.random.default_rng(seed)
+    exp, uni, sin = rng.exponential, rng.uniform, math.sin
+    scale, two_pi = 1.0 / rate_max, 2.0 * math.pi
     t, arrivals = 0.0, []
     while True:
-        t += rng.exponential(1.0 / rate_max)
+        t += exp(scale)
         if t >= duration_s:
             break
         rate = base_rps * (1.0 + amplitude
-                           * math.sin(2.0 * math.pi * t / period_s + phase))
-        if rng.uniform() * rate_max < rate:
+                           * sin(two_pi * t / period_s + phase))
+        if uni() * rate_max < rate:
             arrivals.append(float(t))
     return [Request(rid, t, "diurnal") for rid, t in enumerate(arrivals)]
 
@@ -166,15 +278,18 @@ def flash_crowd(*, base_rps: float = 0.05, spike_rps: float = 5.0,
     rate_max = max(base_rps, spike_rps)
     if rate_max <= 0:
         return []
+    # scalar for the same reason as ``diurnal`` (exact thinning stream)
     rng = np.random.default_rng(seed)
+    exp, uni = rng.exponential, rng.uniform
+    scale, spike_end = 1.0 / rate_max, spike_at_s + spike_len_s
     t, arrivals = 0.0, []
     while True:
-        t += rng.exponential(1.0 / rate_max)
+        t += exp(scale)
         if t >= duration_s:
             break
-        in_spike = spike_at_s <= t < spike_at_s + spike_len_s
+        in_spike = spike_at_s <= t < spike_end
         rate = spike_rps if in_spike else base_rps
-        if rng.uniform() * rate_max < rate:
+        if uni() * rate_max < rate:
             arrivals.append((float(t), "spike" if in_spike else "base"))
     return [Request(rid, t, tag) for rid, (t, tag) in enumerate(arrivals)]
 
@@ -251,12 +366,10 @@ def multi_function_trace(rates_rps: dict, duration_s: float,
         if rate == 0:
             continue          # disabled function in a sweep
         rng = np.random.default_rng(np.random.SeedSequence([seed, i]))
-        t = 0.0
-        while True:
-            t += rng.exponential(1.0 / rate)
-            if t >= duration_s:
-                break
-            merged.append((float(t), fn, fn))
+        # vectorized Poisson stream, element-identical to the scalar
+        # ``t += rng.exponential(1/rate)`` loop (see _ExpStream)
+        for t in _ExpStream(rng).arrivals_until(0.0, duration_s, 1.0 / rate):
+            merged.append((t, fn, fn))
     merged.sort()
     return [Request(rid, t, tag=tag, fn=fn)
             for rid, (t, fn, tag) in enumerate(merged)]

@@ -1,0 +1,291 @@
+"""PR-5 fast path + parallel sweep executor.
+
+Covers the three contracts the perf work must not bend:
+
+  * the columnar ``RecordArray`` sink quacks like the list of
+    ``RequestRecord`` it replaced, and the default stack's records are
+    STILL bit-identical to the pre-refactor goldens when read through the
+    columnar columns (the golden re-pin after the __slots__/int-kind/
+    struct-of-arrays refactor);
+  * ``run_specs`` / ``run_suite(jobs=N)`` produce byte-identical reports
+    serial vs parallel, merge rows by canonical stack equality, and
+    surface worker failures instead of hanging the pool;
+  * the cached scalar percentile behind AdaptiveTTL matches
+    ``np.percentile`` to the last ulp.
+"""
+import hashlib
+import itertools
+import json
+import os
+
+import numpy as np
+import pytest
+
+import repro.core.container as container_mod
+from repro.core.cluster import ClusterSimulator, RecordArray, RequestRecord
+from repro.core.cluster.events import RECORD_FIELDS
+from repro.core.cluster.policies import _percentile_linear
+from repro.core.function import FunctionSpec, Handler
+from repro.core.stack import ExperimentSpec, PolicyStack, run_specs
+from repro.core.workload import Request, poisson
+
+H = Handler(name="t", base_cpu_seconds=0.2, bootstrap_cpu_seconds=1.0,
+            package_mb=45.0, peak_memory_mb=100.0)
+
+
+def _spec(m=1024):
+    return FunctionSpec(handler=H, memory_mb=m)
+
+
+def _reset_cids():
+    container_mod._ids = itertools.count()
+
+
+# ---------------------------------------------------------- RecordArray sink
+def _ra(n=3):
+    sim = ClusterSimulator(_spec(), seed=0)
+    return sim.run(poisson(0.5, n / 0.5, seed=1))
+
+
+def test_record_array_quacks_like_record_list():
+    recs = _ra()
+    assert isinstance(recs, RecordArray)
+    assert len(recs) > 0 and bool(recs)
+    # indexing / slicing / iteration materialize real dataclasses
+    assert isinstance(recs[0], RequestRecord)
+    assert isinstance(recs[-1], RequestRecord)
+    assert recs[:2] == list(recs)[:2]
+    assert [r.rid for r in recs] == [recs[i].rid for i in range(len(recs))]
+    # equality against both a RecordArray and a plain list
+    assert recs == recs
+    assert recs == list(recs)
+    assert not (recs == list(recs)[:-1])
+
+
+def test_record_array_columns_match_materialized_records():
+    recs = _ra(5)
+    rows = list(recs)
+    for name in ("arrival_s", "end_s", "cost", "cold", "batch_size"):
+        col = recs.column(name)
+        assert [type(v)(x) for v, x in
+                zip([getattr(r, name) for r in rows], col)] \
+            == [getattr(r, name) for r in rows]
+    lat = recs.response_s()
+    assert lat.tolist() == [r.response_s for r in rows]
+    # the column cache returns the same array object while rows are frozen
+    assert recs.column("end_s") is recs.column("end_s")
+
+
+def test_record_array_keep_mask_and_tags_seen():
+    recs = RecordArray()
+    base = dict(rid=0, arrival_s=0.0, start_exec_s=0.0, end_s=1.0,
+                cold=False, prediction_s=1.0, exec_s=1.0, cost=0.1,
+                container_id=0, memory_mb=1024)
+    for i, tag in enumerate(("prime", "x", "x")):
+        recs.append(RequestRecord(**{**base, "rid": i, "tag": tag}))
+    assert recs.tags_seen == {"prime", "x"}
+    assert recs.keep_mask(("nope",)) is None      # proven without scanning
+    mask = recs.keep_mask(("prime",))
+    assert mask.tolist() == [False, True, True]
+
+
+def test_record_field_order_is_pinned():
+    """append_row packs tuples positionally; the dataclass field order is
+    part of the sink's ABI."""
+    assert RECORD_FIELDS == ("rid", "arrival_s", "start_exec_s", "end_s",
+                             "cold", "prediction_s", "exec_s", "cost",
+                             "container_id", "memory_mb", "tag", "fn",
+                             "batch_size", "cold_kind", "provision_s",
+                             "bootstrap_s", "load_s", "restore_s")
+
+
+# ----------------------------------------------------------- golden re-pin
+_GOLDEN = json.load(open(os.path.join(os.path.dirname(__file__), "data",
+                                      "simulator_golden.json")))
+
+
+def test_columnar_sink_still_bit_identical_to_pre_refactor_golden():
+    """Golden re-pin after the __slots__/int-kind/columnar refactor: the
+    digest is recomputed from the columnar arrays (not the materialized
+    dataclasses), so the struct-of-arrays path itself is what's pinned."""
+    _reset_cids()
+    recs = ClusterSimulator(_spec(), seed=0,
+                            keepalive_s=75.0).run(poisson(0.02, 20000.0,
+                                                          seed=1))
+    cols = {n: recs.column(n) for n in
+            ("rid", "arrival_s", "start_exec_s", "end_s", "cold",
+             "prediction_s", "exec_s", "cost", "container_id",
+             "memory_mb", "tag")}
+    rows = [[int(cols["rid"][i]), float(cols["arrival_s"][i]).hex(),
+             float(cols["start_exec_s"][i]).hex(),
+             float(cols["end_s"][i]).hex(), bool(cols["cold"][i]),
+             float(cols["prediction_s"][i]).hex(),
+             float(cols["exec_s"][i]).hex(), float(cols["cost"][i]).hex(),
+             int(cols["container_id"][i]), int(cols["memory_mb"][i]),
+             cols["tag"][i]] for i in range(len(recs))]
+    digest = hashlib.sha256(
+        json.dumps(rows, sort_keys=True).encode()).hexdigest()
+    assert len(rows) == _GOLDEN["evictions"]["n"]
+    assert digest == _GOLDEN["evictions"]["sha256"]
+
+
+def test_unsorted_trace_falls_back_to_heap_and_matches_sorted_run():
+    """The merged arrival fast path requires a time-sorted trace; an
+    unsorted one must take the heap fallback and still serve every request
+    with identical results to the sorted equivalent."""
+    wl = [Request(0, 5.0), Request(1, 1.0), Request(2, 3.0)]
+    _reset_cids()
+    a = ClusterSimulator(_spec(), seed=0).run(wl)
+    _reset_cids()
+    b = ClusterSimulator(_spec(), seed=0).run(
+        sorted(wl, key=lambda r: r.arrival_s))
+    assert sorted((r.rid, r.start_exec_s, r.end_s) for r in a) \
+        == sorted((r.rid, r.start_exec_s, r.end_s) for r in b)
+
+
+# ------------------------------------------------------------- run_specs
+def test_run_specs_serial_equals_parallel_and_merges_by_stack():
+    stacks = PolicyStack.grid({"keepalive": ("fixed", "adaptive"),
+                               "scaling": ("lambda", "predictive")})
+    work = [ExperimentSpec(scenario="sparse", stack=s, scale=0.02)
+            for s in stacks]
+    serial = run_specs(work)
+    parallel = run_specs(work, jobs=2)
+    assert serial == parallel                      # row-for-row, in order
+    rows = dict(zip(stacks, parallel))             # canonical-equality keys
+    assert rows[PolicyStack()] == parallel[0]
+    assert len(rows) == len(stacks)
+
+
+def test_run_specs_surfaces_worker_failure():
+    """A raising work unit fails the sweep promptly instead of hanging the
+    pool (the spec names an unknown scenario, which raises in the worker)."""
+    good = ExperimentSpec(scenario="sparse", scale=0.02)
+    bad = ExperimentSpec(scenario="no_such_scenario", scale=0.02)
+    with pytest.raises(KeyError, match="no_such_scenario"):
+        run_specs([good, bad], jobs=2)
+
+
+# ------------------------------------------------- suite: serial vs parallel
+def test_suite_reports_byte_identical_serial_vs_parallel(tmp_path):
+    """The acceptance pin, at test scale: restricted axes (every scenario's
+    winner and rival stacks included) over two scenarios, written through
+    the real report writer, byte-compared serial vs jobs=2."""
+    from benchmarks.scenario_suite import run_scenario, write_reports
+    from repro.core import scenarios
+    from repro.core.cluster import BatchingConfig
+    axes = {
+        "placement": ("mru",),
+        "keepalive": ("fixed", "adaptive"),
+        "scaling": ("lambda", "predictive"),
+        "coldstart": ("full", "layered"),
+        "concurrency": (1,),
+        "batching": (None, BatchingConfig(max_batch=4, max_wait_s=0.5)),
+    }
+    outs = {}
+    for label, jobs in (("serial", 1), ("parallel", 2)):
+        results = []
+        for name in ("sparse", "flash_crowd"):   # flash_crowd has a rival
+            sc = scenarios.get(name)
+            results.append(run_scenario(sc, scale=sc.tiny_scale, axes=axes,
+                                        jobs=jobs))
+        out = tmp_path / label
+        write_reports(results, str(out))
+        outs[label] = {ext: (out / f"scenario_report.{ext}").read_bytes()
+                       for ext in ("md", "csv")}
+    assert outs["serial"]["md"] == outs["parallel"]["md"]
+    assert outs["serial"]["csv"] == outs["parallel"]["csv"]
+
+
+def test_run_scenario_parallel_guards():
+    from benchmarks.scenario_suite import run_scenario
+    from repro.core import scenarios
+    from repro.core.platform import ServerlessPlatform
+    sc = scenarios.get("sparse")
+    with pytest.raises(ValueError, match="custom platform"):
+        run_scenario(sc, scale=0.02, jobs=2,
+                     platform=ServerlessPlatform(
+                         seed=0, use_fallback_calibration=True))
+    import dataclasses
+    rogue = dataclasses.replace(sc, name="unregistered_variant")
+    with pytest.raises(ValueError, match="registered scenario"):
+        run_scenario(rogue, scale=0.02, jobs=2)
+
+
+# -------------------------------------------------- adaptive-TTL percentile
+def test_percentile_linear_bit_equal_to_numpy():
+    rng = np.random.default_rng(42)
+    for _ in range(2000):
+        n = int(rng.integers(1, 260))
+        vals = rng.exponential(300.0, n).tolist()
+        pct = float(rng.uniform(0.0, 100.0))
+        assert _percentile_linear(vals, pct) == float(np.percentile(vals,
+                                                                    pct))
+    for pct in (0.0, 50.0, 99.0, 100.0):
+        for vals in ([5.0], [1.0, 2.0], [3.0, 3.0, 3.0]):
+            assert _percentile_linear(vals, pct) \
+                == float(np.percentile(vals, pct))
+
+
+def test_adaptive_ttl_cache_invalidates_on_observation():
+    from repro.core.cluster import AdaptiveTTL
+    pol = AdaptiveTTL(base_ttl_s=480.0, margin=1.2, max_ttl_s=3600.0)
+    for _ in range(20):
+        pol.observe_gap("f", 600.0)
+    assert pol.ttl("f") == pytest.approx(720.0)
+    assert pol.ttl("f") == pol.ttl("f")        # served from cache
+    pol.observe_gap("f", 4000.0)               # invalidates
+    assert pol.ttl("f") > 720.0
+
+
+# ------------------------------------------------------------ perf guard CLI
+def test_simloop_bench_guard_exit_codes(tmp_path):
+    from benchmarks import simloop_bench
+    ok_base = tmp_path / "ok.json"
+    fast_base = tmp_path / "fast.json"
+    json.dump({"events_per_sec": 1.0, "tiny": True, "stack": "baseline"},
+              open(ok_base, "w"))
+    json.dump({"events_per_sec": 1e12, "tiny": True, "stack": "baseline"},
+              open(fast_base, "w"))
+    out = tmp_path / "bench.json"
+    argv = ["-n", "2000", "--tiny", "--out", str(out)]
+    assert simloop_bench.main(argv + ["--baseline", str(ok_base)]) == 0
+    assert simloop_bench.main(argv + ["--baseline", str(fast_base)]) == 2
+    # a baseline measured under a different configuration is rejected
+    mismatched = tmp_path / "mismatch.json"
+    json.dump({"events_per_sec": 1.0, "tiny": False, "stack": "baseline"},
+              open(mismatched, "w"))
+    with pytest.raises(SystemExit):
+        simloop_bench.main(argv + ["--baseline", str(mismatched)])
+
+
+def test_summarize_warm_and_cold_flags_compose_like_list_path():
+    """warm_only + cold_only together select nothing — on BOTH the
+    columnar and the materialized-list input (they must never diverge)."""
+    from repro.core import metrics
+    recs = _ra(6)
+    a = metrics.summarize(recs, warm_only=True, cold_only=True)
+    b = metrics.summarize(list(recs), warm_only=True, cold_only=True)
+    assert a == b
+    assert a.n == 0
+    # and each flag alone also agrees across input types
+    for kw in ({"warm_only": True}, {"cold_only": True}, {}):
+        assert metrics.summarize(recs, **kw) == \
+            metrics.summarize(list(recs), **kw)
+
+
+def test_pool_executor_spawns_when_parent_is_threaded():
+    """A multithreaded parent (e.g. after a JAX computation) must not fork
+    — forking can snapshot a held lock into the child.  The pool falls
+    back to spawn and still runs work units correctly."""
+    import threading
+    stop = threading.Event()
+    t = threading.Thread(target=stop.wait, daemon=True)
+    t.start()
+    try:
+        rows = run_specs([ExperimentSpec(scenario="sparse", scale=0.02)],
+                         jobs=2)
+        assert rows and rows[0]["n"] > 0
+    finally:
+        stop.set()
+        t.join()

@@ -145,3 +145,56 @@ def test_multi_function_float_path_unchanged_by_mixed_support():
     assert all(r.tag == r.fn for r in trace)
     b_rate = sum(r.fn == "b" for r in trace) / 120.0
     assert b_rate == pytest.approx(1.0, rel=0.25)
+
+
+# ------------------------------------------- vectorized == scalar (PR 5)
+# The Poisson-stream generators were vectorized over a buffered
+# standard-exponential stream; the retained scalar implementations are the
+# spec, and the fast path must reproduce them ELEMENT-IDENTICALLY (same
+# rids, same tags, bit-equal arrival floats) under the existing seeds.
+from repro.core.workload import _mmpp_bursty_scalar, _poisson_scalar
+
+
+@pytest.mark.parametrize("rate,dur,seed", [
+    (0.004, 250_000.0, 5),     # the sparse-scenario regime
+    (5.0, 2_000.0, 1),         # dense
+    (0.5, 10.0, 9),            # short window
+    (2.0, 0.0, 0),             # empty window (crossing draw only)
+])
+def test_poisson_vectorized_element_identical_to_scalar(rate, dur, seed):
+    assert poisson(rate, dur, seed=seed) == _poisson_scalar(rate, dur,
+                                                            seed=seed)
+
+
+@pytest.mark.parametrize("kw", [
+    {},
+    dict(rate_on_rps=2.0, rate_off_rps=0.01, mean_on_s=30.0,
+         mean_off_s=1200.0, duration_s=40_000.0, seed=7),   # bursty scenario
+    dict(seed=3, start_on=True),
+    dict(rate_off_rps=0.0, seed=2),                         # silent OFF state
+], ids=["defaults", "bursty-scenario", "start-on", "zero-off"])
+def test_mmpp_vectorized_element_identical_to_scalar(kw):
+    assert mmpp_bursty(**kw) == _mmpp_bursty_scalar(**kw)
+
+
+def test_multi_function_poisson_streams_match_scalar_loop():
+    """The float-rate path inside multi_function_trace uses the same
+    buffered stream; pin it against a literal scalar re-derivation of the
+    per-function child-seeded loop."""
+    import numpy as np
+    rates = {"a": 0.5, "b": 1.5}
+    dur, seed = 2_000.0, 11
+    trace = multi_function_trace(rates, dur, seed=seed)
+    merged = []
+    for i, (fn, rate) in enumerate(sorted(rates.items())):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, i]))
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t >= dur:
+                break
+            merged.append((float(t), fn, fn))
+    merged.sort()
+    expect = [Request(rid, t, tag=tag, fn=fn)
+              for rid, (t, fn, tag) in enumerate(merged)]
+    assert trace == expect
