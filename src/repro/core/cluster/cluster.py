@@ -28,6 +28,7 @@ wall times land on the ``RequestRecord`` either way.
 """
 from __future__ import annotations
 
+import gc as _gc
 from heapq import heappop, heappush
 from math import ceil as _ceil
 from typing import Optional, Union
@@ -110,7 +111,7 @@ class ClusterSimulator:
                  seed: int = 0,
                  jitter: float = 0.03, max_containers=_UNSET,
                  concurrency=_UNSET, contention: float = 0.3,
-                 batching=_UNSET):
+                 batching=_UNSET, record_sink=None):
         axes = {"placement": placement, "keepalive": keepalive,
                 "scaling": scaling, "coldstart": coldstart,
                 "concurrency": concurrency, "batching": batching,
@@ -185,7 +186,13 @@ class ClusterSimulator:
         self.max_containers = max_containers
         self.concurrency = max(1, int(concurrency))
         self.contention = contention
-        self.records = RecordArray()
+        # record_sink: an alternative record sink (e.g. a fold/spill-mode
+        # ``StreamingRecordArray`` for day-scale runs).  A folded sink
+        # flips the bounded-memory discipline on: evicted containers are
+        # deleted from their fleet instead of lingering as EVICTED husks,
+        # so cluster state stays O(live containers) over a 10M-request day.
+        self.records = RecordArray() if record_sink is None else record_sink
+        self._drop_evicted = getattr(self.records, "fold", None) is not None
         self.prewarms = 0
         self.events = 0            # loop iterations (simloop_bench reads it)
         self._active_n = 0         # O(1) live-container count across fleets
@@ -193,6 +200,20 @@ class ClusterSimulator:
         self.pool: Optional[BarePool] = (BarePool()
                                          if self.coldstart.pool_size > 0
                                          else None)
+        # The fused fast loop (``_run_fast``) serves exactly the policy
+        # region whose specializations above are all engaged: fixed TTL,
+        # no prewarming, collapsed FullCold, exact-type MRU, concurrency 1,
+        # no shared cap, no batching, no bare pool.  Inside it, dispatch /
+        # complete / expire are handled inline with no per-event method
+        # calls — the bit-parity contract still holds (same RNG draw
+        # order, same heap tie-breaking, same container id allocation),
+        # pinned by the PR-1 goldens and tests/test_streaming.py's
+        # fast-vs-general parity sweep.
+        self._fast = (self._mru and self._ttl_const is not None
+                      and not self._lazy_evict and not self._track_arrivals
+                      and not self._phased and self.concurrency == 1
+                      and not self.max_containers and self.pool is None
+                      and all(f.batcher is None for f in fleets.values()))
         self._pool_spec: Optional[FunctionSpec] = None
         self.mitigation_cost = 0.0  # snapshot storage + pool idle ($, filled
         self.sim_end_s = 0.0        #  by run()'s finalization)
@@ -248,6 +269,8 @@ class ClusterSimulator:
 
     def _evict(self, fleet: Fleet, cid: int) -> None:
         fleet.evict(cid)
+        if self._drop_evicted:
+            del fleet.containers[cid]
         self._active_n -= 1
 
     def _schedule_expire(self, q: EventQueue, fleet: Fleet, cid: int,
@@ -365,21 +388,50 @@ class ClusterSimulator:
         return "full"
 
     # ------------------------------------------------------------------- run
-    def run(self, requests: list) -> RecordArray:
-        """Serve ``requests``; returns the (columnar) record sink.
+    def run(self, requests) -> RecordArray:
+        """Serve ``requests`` (a list, or any iterable in arrival order);
+        returns the (columnar) record sink.
 
         Arrival fast path: every trace generator emits requests in arrival
         order, so instead of heaping a million arrivals the loop merges the
-        sorted request list against the (small) heap of dynamic events.
+        sorted request stream against the (small) heap of dynamic events.
         The merge preserves the old tie-breaking exactly — arrivals used to
         be pushed before any dynamic event existed, so their sequence
         numbers were lower and an arrival won every same-timestamp tie;
         here the merge pops the arrival whenever ``arrival_s <= head``.
         An unsorted trace falls back to heaping arrivals as before.
+
+        Under the default-stack policy region (``self._fast``) the run is
+        served by ``_run_fast``, a fused loop producing bit-identical
+        records; non-list iterables are then consumed lazily with O(1)
+        lookahead, so a 10M-request generator never materializes — the
+        streamed half of the day-scale discipline (the other half is a
+        fold/spill ``record_sink``).
         """
+        if self._fast:
+            # The fused loops allocate millions of small acyclic objects
+            # (record tuples, heap entries, containers) and create no
+            # reference cycles, so everything they free is freed by
+            # refcounting alone — generational GC passes only re-scan the
+            # survivors over and over.  Pausing collection for the run's
+            # duration (cycle detection deferred, not lost) is worth
+            # ~25% wall time at the 1M-request scale.
+            loop = (self._run_fast_single if len(self._fleets) == 1
+                    else self._run_fast)
+            if not _gc.isenabled():
+                return loop(requests)
+            _gc.disable()
+            try:
+                return loop(requests)
+            finally:
+                _gc.enable()
+        arr = requests if isinstance(requests, list) else list(requests)
+        return self._run_general(arr)
+
+    def _run_general(self, arr: list) -> RecordArray:
+        """The any-policy event loop (see ``run``)."""
         q = EventQueue()
         heap = q._heap
-        arr = requests if isinstance(requests, list) else list(requests)
         n_arr = len(arr)
         last = _NEG_INF
         merged = True
@@ -441,10 +493,438 @@ class ClusterSimulator:
         self._finalize(t)
         return self.records
 
+    def _run_fast(self, requests) -> RecordArray:
+        """Fused event loop for the default-stack policy region.
+
+        One inlined pass replaces the ``_on_arrival`` -> ``_dispatch`` /
+        ``_on_complete`` / ``_on_expire`` call chain; every loop-invariant
+        value is a local.  Three structural savings over the general loop,
+        each provably behaviour-neutral in this region:
+
+        * ``expire_sched`` is not maintained: with a fixed TTL and
+          concurrency 1 a container's dispatch deadlines (``end + ttl``)
+          are strictly increasing, so the general loop's dedup check always
+          passed — every dispatch pushes its EXPIRE unconditionally, and a
+          stale EXPIRE (container reused since) is recognized by the
+          ``last_used_at`` test alone, exactly as before.
+        * ``inflight_ends`` is not maintained: it feeds only the shared-cap
+          throttling path (``_make_room``) and the concurrency > 1 WARM
+          transition guard, neither of which exists here; a COMPLETE always
+          finds its container BUSY with exactly one request in flight.
+        * Event payloads carry (fleet, container) object references, so
+          handlers never re-resolve names through dicts.
+
+        Records are bit-identical to the general loop: RNG draw order (exec
+        before cold setup, one shared lognormal block stream), heap
+        tie-breaking (one seq counter, COMPLETE pushed before EXPIRE), and
+        container id allocation are preserved.  Cosmetic post-run state the
+        general loop leaves behind (``last_arrival_s``, ``expire_sched``)
+        is skipped — nothing outside the loop reads it.
+
+        A non-list ``requests`` is consumed lazily (O(1) lookahead) and
+        must be in arrival order; an unsorted *list* falls back to the
+        general heaped path, unchanged.
+
+        Single-fleet runs (the simloop_bench configuration) take the
+        further-specialized ``_run_fast_single`` variant; ``run`` picks
+        the loop and pauses generational GC around either.
+        """
+        if isinstance(requests, list):
+            last = _NEG_INF
+            for r in requests:
+                a = r.arrival_s
+                if a < last:
+                    return self._run_general(requests)  # rare: unsorted
+                last = a
+            check_sorted = False
+        else:
+            check_sorted = True
+        it = iter(requests)
+
+        q = EventQueue()
+        heap = q._heap
+        seq = q._seq
+        fleets = self._fleets
+        default_fleet = self._default_fleet
+        route = self.router.route
+        records = self.records
+        if type(records) is RecordArray:
+            row_sink = records._rows.append       # plain sink: no chunking
+            tag_sink = records.tags_seen.add
+        else:
+            row_sink = records.append_row         # chunked/fold/spill sink
+            tag_sink = None
+        rng_lognormal = self.rng.lognormal
+        jitter = self.jitter
+        do_jit = jitter > 0.0
+        # jitter block state: jlist is the current numpy block as exact
+        # python floats (x * jlist[i] is bit-identical to the general
+        # loop's float(x * buf[i]) — same IEEE doubles, same multiply)
+        jarr = self._jit_buf
+        jlist = jarr.tolist() if jarr is not None else None
+        jpos = self._jit_pos if jarr is not None else _JIT_CHUNK
+        ttl = self._ttl_const
+        ttl_eps = ttl - 1e-9
+        drop_evicted = self._drop_evicted
+        active_n = self._active_n
+        events = self.events
+        net = _NET_S
+        tick = _TICK_S
+        ceil_ = _ceil
+        nxt = next
+        heappush_, heappop_ = heappush, heappop
+        WARM, BUSY, EVICTED = State.WARM, State.BUSY, State.EVICTED
+        PROV, BOOT, LOADP = Phase.PROVISION, Phase.BOOTSTRAP, Phase.LOAD
+
+        t = 0.0
+        prev_a = _NEG_INF
+        r = nxt(it, None)
+        while True:
+            if r is not None:
+                ta = r.arrival_s
+                if not heap or ta <= heap[0][0]:
+                    # ---------------- ARRIVAL + inline dispatch ----------
+                    events += 1
+                    t = ta
+                    req = r
+                    r = nxt(it, None)
+                    if check_sorted:
+                        if ta < prev_a:
+                            raise ValueError(
+                                f"streamed trace is not in arrival order "
+                                f"(rid {req.rid} at {ta} after {prev_a}); "
+                                f"materialize it to a list to heap-sort "
+                                f"arrivals")
+                        prev_a = ta
+                    fn = req.fn
+                    if fn:
+                        fleet = fleets.get(fn)
+                        if fleet is None:
+                            fleet = route(req)  # raises the nice KeyError
+                    else:
+                        fleet = default_fleet
+                    if fleet.idle_stale:
+                        fleet.prune_idle()
+                    idle = fleet.idle
+                    if idle:
+                        entry = max(idle)       # MRUPlacement, inlined
+                        idle.remove(entry)
+                        c = fleet.containers[entry[1]]
+                        cold = False
+                    else:
+                        cold = True
+                        c = Container(fleet.spec, created_at=ta)
+                        fleet.cold_starts += 1
+                        fleet.containers[c.cid] = c
+                        fleet.live.add(c.cid)
+                        active_n += 1
+                    # exec draw first, then cold-setup draw (RNG parity)
+                    if do_jit:
+                        if jpos >= _JIT_CHUNK:
+                            jarr = rng_lognormal(0.0, jitter, _JIT_CHUNK)
+                            jlist = jarr.tolist()
+                            jpos = 0
+                        exec_s = fleet.warm_exec_s * jlist[jpos]
+                        jpos += 1
+                    else:
+                        exec_s = fleet.warm_exec_s
+                    if cold:
+                        total = fleet.cold_total_s
+                        if do_jit and total > 0.0:
+                            if jpos >= _JIT_CHUNK:
+                                jarr = rng_lognormal(0.0, jitter, _JIT_CHUNK)
+                                jlist = jarr.tolist()
+                                jpos = 0
+                            setup = total * jlist[jpos]
+                            jpos += 1
+                            factor = setup / total
+                        else:
+                            setup = total
+                            factor = 1.0 if total > 0.0 else 0.0
+                        bd = fleet.cold_bd
+                        prov = bd.provision_s * factor
+                        boot = bd.bootstrap_s * factor
+                        load = setup - prov - boot
+                        comp = c.completed     # mark_done x3, inlined (a
+                        comp.add(PROV)         # fresh container: no prior
+                        comp.add(BOOT)         # phase_times to accumulate)
+                        comp.add(LOADP)
+                        pt = c.phase_times
+                        pt[PROV] = prov
+                        pt[BOOT] = boot
+                        pt[LOADP] = load
+                        kind_s = "full"
+                        start = ta + setup
+                        c.ready_at = start
+                    else:
+                        prov = boot = load = 0.0
+                        kind_s = ""
+                        start = ta   # an idle container is always ready
+                    end = start + exec_s + net
+                    c.state = BUSY
+                    c.last_used_at = end   # conc 1: end > previous end
+                    c.invocations += 1
+                    heappush_(heap, (end, nxt(seq), 1, (fleet, c)))
+                    heappush_(heap, (end + ttl, nxt(seq), 2, (fleet, c)))
+                    ticks = ceil_(exec_s / tick)
+                    if ticks < 1:
+                        ticks = 1
+                    row_sink((req.rid, ta, start, end, cold, exec_s,
+                              exec_s, ticks * fleet.price_100ms, c.cid,
+                              fleet.memory_mb, req.tag, fleet.name, 1,
+                              kind_s, prov, boot, load, 0.0))
+                    if tag_sink is not None:
+                        tag_sink(req.tag)
+                    continue
+            elif not heap:
+                break
+            item = heappop_(heap)
+            t = item[0]
+            events += 1
+            fc = item[3]
+            c = fc[1]
+            if item[2] == 1:
+                # ---------------------- COMPLETE ------------------------
+                # a BUSY container (never evicted in flight here) frees its
+                # single slot and joins the idle list
+                c.state = WARM
+                fc[0].idle.append((t, c.cid))
+            elif c.state is WARM and t - c.last_used_at >= ttl_eps:
+                # ------------------------ EXPIRE ------------------------
+                # stale checks (container reused since this was scheduled)
+                # fall through as no-ops: the reuse pushed a later EXPIRE
+                fleet = fc[0]
+                cid = c.cid
+                c.state = EVICTED
+                fleet.live.discard(cid)
+                fleet.evictions += 1
+                fleet.idle_stale = True
+                if drop_evicted:
+                    del fleet.containers[cid]
+                active_n -= 1
+        self.events = events
+        self._active_n = active_n
+        self._jit_buf = jarr
+        self._jit_pos = jpos
+        self._finalize(t)
+        return self.records
+
+    def _run_fast_single(self, requests) -> RecordArray:
+        """``_run_fast`` further specialized for one fleet.
+
+        Everything per-fleet becomes a loop-local (no attribute loads per
+        event), heap entries carry the ``Container`` and its cid directly
+        (no payload tuple, no name re-resolution), the seq tie-breaker is a
+        plain int, the next arrival's time is cached between iterations,
+        and an eviction removes its own idle entry directly — a WARM
+        container's idle entry is exactly ``(last_used_at, cid)``, so the
+        flag-and-prune round trip disappears.  MRU placement reads
+        ``idle[-1]``: COMPLETE events pop in time order, so the idle list
+        is always sorted by completion time.  All still bit-identical to
+        the general loop (same parity argument as ``_run_fast``).
+        """
+        if isinstance(requests, list):
+            last = _NEG_INF
+            for r in requests:
+                a = r.arrival_s
+                if a < last:
+                    return self._run_general(requests)  # rare: unsorted
+                last = a
+            check_sorted = False
+        else:
+            check_sorted = True
+        it = iter(requests)
+
+        heap: list = []
+        fleet = self._default_fleet
+        fname = fleet.name
+        route = self.router.route
+        containers = fleet.containers
+        live = fleet.live
+        idle = fleet.idle
+        idle_append = idle.append
+        spec = fleet.spec
+        warm_exec = fleet.warm_exec_s
+        cold_total = fleet.cold_total_s
+        bd = fleet.cold_bd
+        prov_frac = bd.provision_s
+        boot_frac = bd.bootstrap_s
+        price = fleet.price_100ms
+        mem = fleet.memory_mb
+        cold_starts_n = fleet.cold_starts
+        evictions_n = fleet.evictions
+        records = self.records
+        if type(records) is RecordArray:
+            row_sink = records._rows.append       # plain sink: no chunking
+            tag_sink = records.tags_seen.add
+        else:
+            row_sink = records.append_row         # chunked/fold/spill sink
+            tag_sink = None
+        rng_lognormal = self.rng.lognormal
+        jitter = self.jitter
+        do_jit = jitter > 0.0
+        jarr = self._jit_buf
+        jlist = jarr.tolist() if jarr is not None else None
+        jpos = self._jit_pos if jarr is not None else _JIT_CHUNK
+        ttl = self._ttl_const
+        ttl_eps = ttl - 1e-9
+        drop_evicted = self._drop_evicted
+        active_n = self._active_n
+        events = self.events
+        net = _NET_S
+        tick = _TICK_S
+        ceil_ = _ceil
+        nxt = next
+        heappush_, heappop_ = heappush, heappop
+        WARM, BUSY, EVICTED = State.WARM, State.BUSY, State.EVICTED
+        PROV, BOOT, LOADP = Phase.PROVISION, Phase.BOOTSTRAP, Phase.LOAD
+        Container_ = Container
+        INF = float("inf")
+        n_rows0 = len(records)
+
+        # ``self.events`` is settled arithmetically at the end: in this
+        # policy region every arrival dispatches exactly one request,
+        # every dispatch pushes exactly one COMPLETE and one EXPIRE, and
+        # the drain pops them all — so loop iterations are exactly
+        # 3 x dispatches, the same count the general loop accumulates.
+        t = 0.0
+        head_t = INF               # heap[0][0] mirror (INF when empty)
+        prev_a = _NEG_INF
+        seqn = 0
+        r = nxt(it, None)
+        ta = r.arrival_s if r is not None else INF
+        while True:
+            if ta <= head_t:
+                # ------------------ ARRIVAL + inline dispatch ------------
+                if r is None:
+                    break          # arrivals exhausted AND heap drained
+                req = r
+                t_arr = ta
+                r = nxt(it, None)
+                ta = r.arrival_s if r is not None else INF
+                if check_sorted:
+                    if t_arr < prev_a:
+                        raise ValueError(
+                            f"streamed trace is not in arrival order "
+                            f"(rid {req.rid} at {t_arr} after {prev_a}); "
+                            f"materialize it to a list to heap-sort "
+                            f"arrivals")
+                    prev_a = t_arr
+                fn = req.fn
+                if fn and fn != fname:
+                    route(req)              # raises the nice KeyError
+                if idle:
+                    # COMPLETE events pop in time order, so idle is always
+                    # sorted by completion time: MRU = the last entry.
+                    # Exact ties (identical end times, possible only with
+                    # jitter 0) fall back to max() for bit-parity with
+                    # MRUPlacement's (ts, cid) tuple ordering.
+                    entry = idle[-1]
+                    if len(idle) > 1 and idle[-2][0] == entry[0]:
+                        entry = max(idle)
+                        idle.remove(entry)
+                    else:
+                        idle.pop()
+                    cid = entry[1]
+                    c = containers[cid]
+                    cold = False
+                else:
+                    cold = True
+                    c = Container_(spec, created_at=t_arr)
+                    cid = c.cid
+                    cold_starts_n += 1
+                    containers[cid] = c
+                    live.add(cid)
+                    active_n += 1
+                # exec draw first, then cold-setup draw (RNG parity)
+                if do_jit:
+                    if jpos >= _JIT_CHUNK:
+                        jarr = rng_lognormal(0.0, jitter, _JIT_CHUNK)
+                        jlist = jarr.tolist()
+                        jpos = 0
+                    exec_s = warm_exec * jlist[jpos]
+                    jpos += 1
+                else:
+                    exec_s = warm_exec
+                if cold:
+                    if do_jit and cold_total > 0.0:
+                        if jpos >= _JIT_CHUNK:
+                            jarr = rng_lognormal(0.0, jitter, _JIT_CHUNK)
+                            jlist = jarr.tolist()
+                            jpos = 0
+                        setup = cold_total * jlist[jpos]
+                        jpos += 1
+                        factor = setup / cold_total
+                    else:
+                        setup = cold_total
+                        factor = 1.0 if cold_total > 0.0 else 0.0
+                    prov = prov_frac * factor
+                    boot = boot_frac * factor
+                    load = setup - prov - boot
+                    comp = c.completed     # mark_done x3, inlined
+                    comp.add(PROV)
+                    comp.add(BOOT)
+                    comp.add(LOADP)
+                    pt = c.phase_times
+                    pt[PROV] = prov
+                    pt[BOOT] = boot
+                    pt[LOADP] = load
+                    kind_s = "full"
+                    start = t_arr + setup
+                    c.ready_at = start
+                else:
+                    prov = boot = load = 0.0
+                    kind_s = ""
+                    start = t_arr   # an idle container is always ready
+                end = start + exec_s + net
+                c.state = BUSY
+                c.last_used_at = end   # conc 1: end > previous end
+                c.invocations += 1
+                heappush_(heap, (end, seqn, 1, c, cid))
+                heappush_(heap, (end + ttl, seqn + 1, 2, c, cid))
+                seqn += 2
+                if end < head_t:
+                    head_t = end
+                ticks = ceil_(exec_s / tick)
+                if ticks < 1:
+                    ticks = 1
+                row_sink((req.rid, t_arr, start, end, cold, exec_s,
+                          exec_s, ticks * price, cid, mem, req.tag,
+                          fname, 1, kind_s, prov, boot, load, 0.0))
+                if tag_sink is not None:
+                    tag_sink(req.tag)
+                continue
+            t, _sq, kind, c, cid = heappop_(heap)
+            head_t = heap[0][0] if heap else INF
+            if kind == 1:
+                # ---------------------- COMPLETE ------------------------
+                c.state = WARM
+                idle_append((t, cid))
+            elif c.state is WARM and t - c.last_used_at >= ttl_eps:
+                # ------------------------ EXPIRE ------------------------
+                c.state = EVICTED
+                live.discard(cid)
+                evictions_n += 1
+                idle.remove((c.last_used_at, cid))
+                if drop_evicted:
+                    del containers[cid]
+                active_n -= 1
+        fleet.cold_starts = cold_starts_n
+        fleet.evictions = evictions_n
+        self.events += 3 * (len(records) - n_rows0)
+        self._active_n = active_n
+        self._jit_buf = jarr
+        self._jit_pos = jpos
+        self._finalize(t)
+        return self.records
+
     def _finalize(self, t_end: float) -> None:
         """Settle the platform-side mitigation spend (snapshot storage held
         to end of run, bare-pool idle) — zero under FullCold."""
         self.sim_end_s = t_end
+        fin = getattr(self.records, "finalize", None)
+        if fin is not None:
+            fin()               # fold/spill the sink's final partial chunk
         cost = 0.0
         if self.pool is not None:
             self.pool.settle(t_end)
@@ -464,8 +944,9 @@ class ClusterSimulator:
             ends.remove(end)
             if not ends:
                 del inflight_ends[cid]
-        c = fleet.containers[cid]
-        if cid not in inflight_ends and c.state is not State.EVICTED:
+        c = fleet.containers.get(cid)
+        if c is not None and cid not in inflight_ends and \
+                c.state is not State.EVICTED:
             c.state = State.WARM
             fleet.idle.append((t, cid))
 
@@ -590,9 +1071,11 @@ class ClusterSimulator:
         Never runs under FixedTTL, whose scheduled expiries are exact (and
         whose tie-breaking the bit-parity contract pins)."""
         ttl = self.keepalive.ttl(fleet.name)
+        containers = fleet.containers
         for _, cid in fleet.idle:
-            c = fleet.containers[cid]
-            if c.state == State.WARM and now - c.last_used_at >= ttl - 1e-9:
+            c = containers.get(cid)
+            if c is not None and c.state == State.WARM and \
+                    now - c.last_used_at >= ttl - 1e-9:
                 self._evict(fleet, cid)
 
     def _candidates(self, fleet: Fleet, now: float) -> list:

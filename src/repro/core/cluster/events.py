@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import json as _json
 
 import numpy as np
 
@@ -171,13 +172,19 @@ class RecordArray:
             return [RequestRecord(*row) for row in self._rows[i]]
         return RequestRecord(*self._rows[i])
 
+    def _all_rows(self) -> list:
+        """Every row as one list (subclass hook: a chunked sink stitches
+        its chunks here; a folded sink raises — its rows are gone)."""
+        return self._rows
+
     def __eq__(self, other) -> bool:
         if isinstance(other, RecordArray):
-            return self._rows == other._rows
+            return self._all_rows() == other._all_rows()
         if isinstance(other, list):
-            return len(self._rows) == len(other) and \
+            rows = self._all_rows()
+            return len(rows) == len(other) and \
                 all(RequestRecord(*row) == r
-                    for row, r in zip(self._rows, other))
+                    for row, r in zip(rows, other))
         return NotImplemented
 
     def __repr__(self) -> str:
@@ -222,3 +229,204 @@ class RecordArray:
             return None
         return np.fromiter((row[_TAG_I] not in drop_tags for row in self._rows),
                            dtype=bool, count=len(self._rows))
+
+
+class StreamingRecordArray(RecordArray):
+    """Bounded-memory record sink: rows accumulate into fixed-size chunks
+    and each full chunk is handed off according to ``mode``.
+
+    ``mode="hold"``
+        Chunks are retained in memory — the full list/columnar API works
+        and results are byte-identical to a monolithic ``RecordArray``
+        (pinned by the chunked-goldens tests).  Exercises the chunk
+        plumbing without changing memory behaviour; for small runs.
+    ``mode="fold"``
+        Each full chunk folds into a ``repro.core.metrics.RecordFold``
+        (running counts/sums/extrema plus quantile sketches) and its rows
+        are dropped.  Peak memory is one chunk + the fold state, no
+        matter how many requests stream through; ``summarize`` /
+        ``sla.evaluate`` / ``phase_breakdown`` / ``container_seconds``
+        read the folded state via the ``fold`` attribute.  Row access
+        (iteration, indexing, columns) raises — the rows are gone.
+    ``mode="spill"``
+        Like ``fold``, but each chunk is also appended to a JSONL file
+        (one JSON array per row, ``RECORD_FIELDS`` order, after a header
+        line) before being dropped, so the full record stream survives on
+        disk for offline analysis; ``iter_spilled`` reads it back.
+
+    The simulator only ever calls ``append_row`` — the per-append overhead
+    over the plain sink is a single length check.  ``finalize()`` (called
+    by ``ClusterSimulator.run`` when the sink provides it) folds/spills
+    the final partial chunk and closes the spill file.
+
+    The tag filter a folded summary would apply is fixed at fold time via
+    ``drop_tags``; ``alpha`` is the quantile sketches' relative-error
+    bound.
+    """
+
+    __slots__ = ("chunk_size", "mode", "fold", "_chunks", "_flushed",
+                 "spill_path", "_spill_fh")
+
+    def __init__(self, chunk_size: int = 65536, mode: str = "hold", *,
+                 spill_path=None, drop_tags: tuple = ("prime",),
+                 alpha: float = 0.001):
+        super().__init__()
+        if mode not in ("hold", "fold", "spill"):
+            raise ValueError(f"unknown streaming mode {mode!r}")
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        if mode == "spill" and spill_path is None:
+            raise ValueError("mode='spill' needs spill_path=")
+        self.chunk_size = int(chunk_size)
+        self.mode = mode
+        self._chunks: list = []      # hold mode: flushed chunks, in order
+        self._flushed = 0            # rows flushed out of the current chunk
+        self.spill_path = spill_path
+        self._spill_fh = None
+        if mode == "hold":
+            self.fold = None
+        else:
+            from repro.core.metrics import RecordFold   # events<->metrics
+            self.fold = RecordFold(drop_tags=drop_tags, alpha=alpha)
+            if mode == "spill":
+                self._spill_fh = open(spill_path, "w")
+                self._spill_fh.write(_json.dumps(
+                    {"record_fields": list(RECORD_FIELDS)}) + "\n")
+
+    # ------------------------------------------------------------- sink side
+    def append_row(self, row: tuple) -> None:
+        rows = self._rows
+        rows.append(row)
+        self.tags_seen.add(row[_TAG_I])
+        if len(rows) >= self.chunk_size:
+            self._flush_chunk()
+
+    def _flush_chunk(self) -> None:
+        rows = self._rows
+        if not rows:
+            return
+        self._flushed += len(rows)
+        if self.mode == "hold":
+            self._chunks.append(rows)
+        else:
+            if self._spill_fh is not None:
+                write = self._spill_fh.write
+                for row in rows:
+                    write(_json.dumps(list(row)) + "\n")
+            self.fold.fold_chunk(RecordArray(rows))
+        self._rows = []
+
+    def finalize(self) -> None:
+        """Fold/spill the final partial chunk; idempotent."""
+        if self.mode != "hold":
+            self._flush_chunk()
+        if self._spill_fh is not None:
+            self._spill_fh.close()
+            self._spill_fh = None
+
+    # ----------------------------------------------------------- list facade
+    def _all_rows(self) -> list:
+        if self.mode != "hold":
+            raise RuntimeError(
+                f"rows were consumed (mode={self.mode!r}); read metrics "
+                f"from the folded state via .fold")
+        out: list = []
+        for chunk in self._chunks:
+            out.extend(chunk)
+        out.extend(self._rows)
+        return out
+
+    def __len__(self) -> int:
+        return self._flushed + len(self._rows)
+
+    def __bool__(self) -> bool:
+        return bool(self._flushed or self._rows)
+
+    def __iter__(self):
+        if self.mode != "hold":
+            return iter(self._all_rows())    # raises with the mode message
+        return (RequestRecord(*row) for row in self._iter_rows())
+
+    def _iter_rows(self):
+        for chunk in self._chunks:
+            yield from chunk
+        yield from self._rows
+
+    def __getitem__(self, i):
+        if self.mode != "hold":
+            self._all_rows()                 # raises with the mode message
+        if isinstance(i, slice):
+            return [RequestRecord(*row) for row in self._all_rows()[i]]
+        n = len(self)
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError(i)
+        # every flushed chunk holds exactly chunk_size rows
+        ci, off = divmod(i, self.chunk_size)
+        if ci < len(self._chunks):
+            return RequestRecord(*self._chunks[ci][off])
+        return RequestRecord(*self._rows[i - self._flushed])
+
+    def __repr__(self) -> str:
+        return (f"StreamingRecordArray(n={len(self)}, mode={self.mode!r}, "
+                f"chunk_size={self.chunk_size})")
+
+    # --------------------------------------------------------- columnar side
+    def column(self, name: str) -> np.ndarray:
+        if self.mode != "hold":
+            self._all_rows()                 # raises with the mode message
+        n = len(self)
+        hit = self._colcache.get(name)
+        if hit is not None and hit[0] == n:
+            return hit[1]
+        i = _FIELD_INDEX[name]
+        parts = []
+        for chunk in (*self._chunks, self._rows):
+            if not chunk:
+                continue
+            if name in _NUMERIC_FIELDS:
+                parts.append(np.fromiter((row[i] for row in chunk),
+                                         dtype=np.float64, count=len(chunk)))
+            else:
+                parts.append(np.array([row[i] for row in chunk],
+                                      dtype=object))
+        col = (np.concatenate(parts) if parts
+               else np.empty(0, dtype=(np.float64 if name in _NUMERIC_FIELDS
+                                       else object)))
+        self._colcache[name] = (n, col)
+        return col
+
+    def response_s(self) -> np.ndarray:
+        if self.mode != "hold":
+            self._all_rows()                 # raises with the mode message
+        n = len(self)
+        hit = self._colcache.get("response_s")
+        if hit is not None and hit[0] == n:
+            return hit[1]
+        col = self.column("end_s") - self.column("arrival_s")
+        self._colcache["response_s"] = (n, col)
+        return col
+
+    def keep_mask(self, drop_tags: tuple = ()) -> np.ndarray | None:
+        if self.mode != "hold":
+            self._all_rows()                 # raises with the mode message
+        dropped = self.tags_seen.intersection(drop_tags)
+        if not dropped:
+            return None
+        return np.fromiter(
+            (row[_TAG_I] not in drop_tags for row in self._iter_rows()),
+            dtype=bool, count=len(self))
+
+
+def iter_spilled(path):
+    """Yield ``RequestRecord``s back out of a ``mode="spill"`` JSONL file."""
+    with open(path) as fh:
+        header = _json.loads(fh.readline())
+        fields = header.get("record_fields", [])
+        if tuple(fields) != RECORD_FIELDS:
+            raise ValueError(
+                f"spill file {path} has record layout {fields}; this "
+                f"build expects {list(RECORD_FIELDS)}")
+        for line in fh:
+            yield RequestRecord(*_json.loads(line))

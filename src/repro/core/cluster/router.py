@@ -70,6 +70,7 @@ class Fleet:
         self.cold_bd = cold_start_breakdown(spec)
         self.cold_total_s = self.cold_bd.total_s
         self.price_100ms = billing.price_per_100ms(spec.memory_mb)
+        self.memory_mb = spec.memory_mb
         # set on evict(): the idle list may hold a dead cid, so the next
         # _candidates call must prune.  While clear, idle holds only WARM
         # containers and pruning is skipped (the common case).
@@ -93,8 +94,12 @@ class Fleet:
         return len(self.live)
 
     def prune_idle(self) -> None:
+        # .get(): under the bounded-memory streaming discipline evicted
+        # containers are deleted outright, not just flagged EVICTED
+        cs = self.containers
         self.idle = [(ts, cid) for ts, cid in self.idle
-                     if self.containers[cid].state == State.WARM]
+                     for c in (cs.get(cid),)
+                     if c is not None and c.state == State.WARM]
         self.idle_stale = False
 
     def inflight(self, cid: int) -> int:

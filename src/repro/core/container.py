@@ -56,6 +56,12 @@ class Phase(enum.Enum):
     LOAD = "load"
     RESTORE = "restore"
 
+    # members are singletons compared by identity, so the id-based C-slot
+    # hash is equivalent to Enum's Python-level name hash — and the hot
+    # loop hashes Phase keys (mark_done, phase_s) hundreds of thousands
+    # of times per bench run
+    __hash__ = object.__hash__
+
 
 # which lifecycle milestones each phase completes
 _PHASE_COMPLETES = {
@@ -74,6 +80,9 @@ class State(enum.Enum):
     LOADED = "warm"                # alias: lifecycle name for WARM
     BUSY = "busy"
     EVICTED = "evicted"
+
+    __hash__ = object.__hash__     # see Phase.__hash__
+
 
 
 # parked state reached when a phase completes and the container is idle

@@ -136,9 +136,16 @@ class ServerlessPlatform:
         self._fallback = use_fallback_calibration
 
     # ------------------------------------------------------------------
-    def deploy_paper_model(self, variant: str, memory_mb: int) -> FunctionSpec:
+    def deploy_paper_model(self, variant: str, memory_mb: int,
+                           name: Optional[str] = None) -> FunctionSpec:
+        """Deploy one of the paper's CNN payloads.  ``name`` overrides the
+        handler name so one model can back many tenant functions (the
+        multi-tenant fleet deploys hundreds of functions over three
+        models) without their specs colliding in ``self.functions``."""
         h = calibration.paper_handler(variant, calibrated=self._cal,
                                       use_fallback=self._fallback)
+        if name is not None:
+            h = dataclasses.replace(h, name=name)
         return self.deploy(h, memory_mb)
 
     def deploy(self, handler: Handler, memory_mb: int) -> FunctionSpec:

@@ -11,9 +11,11 @@ A ``Scenario`` bundles everything ``benchmarks/scenario_suite.py`` needs:
   * ``functions`` — the fleet: (paper model, memory tier) pairs deployed on
     a ``ServerlessPlatform``; the first entry is the default-route fleet.
   * ``trace`` — a factory ``(fn_names, seed, scale) -> list[Request]``
-    built from ``repro.core.workload`` generators.  ``scale`` multiplies
-    trace duration so CI can run tiny smoke variants of the same scenario
-    (``tiny_scale`` is the suite's ``--tiny`` choice).
+    built from ``repro.core.workload`` generators.  ``scale`` lets CI run
+    tiny smoke variants of the same scenario (``tiny_scale`` is the
+    suite's ``--tiny`` choice); most scenarios multiply trace duration by
+    it, while ``multi_tenant`` multiplies the aggregate rate so the
+    day-long diurnal shape survives scaling.
   * ``sla`` — the ``repro.core.sla.SLA`` bound the report grades against.
   * ``expected_winner`` — a ``POLICY_STACKS`` name; the suite's verdict
     compares this stack against ``baseline`` on cold rate and p95.
@@ -37,7 +39,7 @@ extend it (e.g. a replayed production trace via ``workload.trace_replay``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 from repro.core import workload as wl
 from repro.core.cluster import BatchingConfig
@@ -87,9 +89,16 @@ _TUNED_AXES = {KeepaliveConfig: "keepalive", ScalingConfig: "scaling",
 
 @dataclasses.dataclass(frozen=True)
 class FleetFunction:
-    """One deployed function in a scenario's fleet."""
+    """One deployed function in a scenario's fleet.
+
+    ``name`` (optional) renames the deployed handler so one paper model
+    can back many tenant functions — the multi-tenant fleet deploys
+    hundreds of functions over three models, and each needs a distinct
+    ``FunctionSpec.name`` to route by.
+    """
     model: str            # repro.core.calibration.PAPER_MODELS key
     memory_mb: int = 1024
+    name: str = ""        # handler rename; "" keeps the model name
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +116,10 @@ class Scenario:
                           # ColdstartConfig) tuned for this regime
     rival: str = ""                         # stack the winner must beat on
                                             # cold rate (pre-mitigation best)
+    stream_trace: Optional[Callable] = None  # (fn_names, seed, scale) ->
+                                             # Iterator[Request]: a lazy
+                                             # variant of ``trace`` for
+                                             # day-scale streaming runs
 
     def __post_init__(self):
         for cfg in self.tuning:
@@ -119,7 +132,8 @@ class Scenario:
 
     def deploy(self, platform) -> list:
         """Deploy the fleet on ``platform``; returns specs in fleet order."""
-        return [platform.deploy_paper_model(f.model, f.memory_mb)
+        return [platform.deploy_paper_model(f.model, f.memory_mb,
+                                            name=f.name or None)
                 for f in self.functions]
 
     def tune(self, stack: PolicyStack) -> PolicyStack:
@@ -154,6 +168,21 @@ class Scenario:
         if self.rival and self.rival not in POLICY_STACKS:
             raise KeyError(f"{self.name}: unknown rival {self.rival!r}")
         return self.trace(list(fn_names), self.seed, scale)
+
+    def build_stream(self, fn_names: list, scale: float = 1.0):
+        """Lazy counterpart of ``build_trace`` for scenarios that provide a
+        streaming generator (``stream_trace``) — same requests, never
+        materialized.  ``benchmarks/simloop_bench.py --stream`` feeds this
+        straight into the simulator so a 10M-request day runs in bounded
+        memory."""
+        if self.stream_trace is None:
+            raise ValueError(f"{self.name} has no streaming trace variant; "
+                             f"use build_trace")
+        if len(fn_names) != len(self.functions):
+            raise ValueError(f"{self.name}: expected "
+                             f"{len(self.functions)} fleet names, got "
+                             f"{len(fn_names)}")
+        return self.stream_trace(list(fn_names), self.seed, scale)
 
 
 SCENARIOS: dict = {}
@@ -308,4 +337,52 @@ register(Scenario(
     seed=17,
     tiny_scale=0.05,
     tuning=(ScalingConfig(kind="predictive", min_pool=1),),
+))
+
+# multi_tenant: an Azure-Functions-style production day (Shahrad et al.,
+# ATC'20 shape): hundreds of functions whose request rates follow a Zipf
+# heavy tail — a few hot functions carry most of the traffic while the
+# long tail arrives so sparsely that the fixed 480 s TTL expires between
+# almost every pair of tail invocations.  Each function gets its own
+# diurnal phase (tenants peak at different hours) and an 85/15
+# interactive/batch class mix.  The per-function adaptive gap histogram
+# is the lever that fits this shape: hot functions learn short gaps and
+# keep their pool tight, tail functions learn their true multi-hour gaps
+# and stretch the TTL to cover them — one policy, per-tenant behavior.
+# Unlike the other scenarios, ``scale`` here multiplies the *aggregate
+# rate* (total_rps), not the duration: a tiny smoke run is still a full
+# day, just a quieter one, so the diurnal shape the generator encodes is
+# preserved at every scale.
+MULTI_TENANT_FNS = 200
+MULTI_TENANT_RPS = 0.6
+_MT_MODELS = ("squeezenet", "resnet18", "resnext50")
+_MT_TIERS = (1024, 1024, 1536)
+
+
+def _multi_tenant_fleet() -> Tuple[FleetFunction, ...]:
+    return tuple(FleetFunction(_MT_MODELS[i % 3], _MT_TIERS[i % 3],
+                               name=f"mt{i:03d}")
+                 for i in range(MULTI_TENANT_FNS))
+
+
+def _multi_tenant_stream(fns, seed, scale):
+    return wl.azure_multitenant_stream(
+        fn_names=fns, total_rps=MULTI_TENANT_RPS * scale, alpha=1.2,
+        duration_s=86_400.0, seed=seed)
+
+
+register(Scenario(
+    name="multi_tenant",
+    description="Azure-style multi-tenant day: 200 functions, Zipf(1.2) "
+                "popularity, per-function diurnal phases, 85/15 "
+                "interactive/batch mix; the tail lives beyond the fixed "
+                "TTL.",
+    functions=_multi_tenant_fleet(),
+    trace=lambda fns, seed, scale: list(_multi_tenant_stream(
+        fns, seed, scale)),
+    stream_trace=_multi_tenant_stream,
+    sla=INTERACTIVE,
+    expected_winner="adaptive",
+    seed=19,
+    tiny_scale=0.04,
 ))

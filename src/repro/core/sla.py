@@ -22,15 +22,22 @@ class SLA:
     p99_s: float = float("inf")
 
     def evaluate(self, records) -> dict:
-        if not records:
-            lat = np.zeros(1)
-        elif hasattr(records, "response_s"):
-            lat = records.response_s()     # columnar RecordArray fast path
+        fold = getattr(records, "fold", None)
+        if fold is not None and fold.all_n:
+            # folded streaming sink: percentiles from the O(1)-memory
+            # sketch over the full (unfiltered) latency stream
+            p50, p95, p99 = fold.all_sketch.percentile([50, 95, 99])
+            obs = {"p50": p50, "p95": p95, "p99": p99}
         else:
-            lat = np.array([r.response_s for r in records])
-        obs = {"p50": float(np.percentile(lat, 50)),
-               "p95": float(np.percentile(lat, 95)),
-               "p99": float(np.percentile(lat, 99))}
+            if not records:
+                lat = np.zeros(1)
+            elif hasattr(records, "response_s"):
+                lat = records.response_s()  # columnar RecordArray fast path
+            else:
+                lat = np.array([r.response_s for r in records])
+            obs = {"p50": float(np.percentile(lat, 50)),
+                   "p95": float(np.percentile(lat, 95)),
+                   "p99": float(np.percentile(lat, 99))}
         violations = {
             "p50": obs["p50"] > self.p50_s,
             "p95": obs["p95"] > self.p95_s,
@@ -47,6 +54,27 @@ STRINGENT = SLA("stringent", p95_s=0.5, p99_s=1.0)
 
 
 def bimodality_report(records) -> dict:
+    fold = getattr(records, "fold", None)
+    if fold is not None:
+        # folded streaming sink: modes from the running warm/cold
+        # aggregates (tag-filtered at fold time), percentiles from the
+        # kept-group sketch
+        warm_g, cold_g, kept = fold.warm, fold.cold, fold.kept
+        warm_mean = warm_g.lat_sum / warm_g.n if warm_g.n else 0.0
+        cold_mean = cold_g.lat_sum / cold_g.n if cold_g.n else 0.0
+        rep = {
+            "n": kept.n,
+            "cold_fraction": cold_g.n / max(kept.n, 1),
+            "warm_mean_s": warm_mean,
+            "cold_mean_s": cold_mean,
+            "mode_separation": (cold_mean / max(warm_mean, 1e-9)
+                                if warm_g.n and cold_g.n else 0.0),
+        }
+        if kept.n:
+            rep["p50_s"] = kept.sketch.quantile(0.50)
+            rep["p99_s"] = kept.sketch.quantile(0.99)
+            rep["p99_over_p50"] = rep["p99_s"] / max(rep["p50_s"], 1e-9)
+        return rep
     warm = [r.response_s for r in records if not r.cold]
     cold = [r.response_s for r in records if r.cold]
     lat = [r.response_s for r in records]

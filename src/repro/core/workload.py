@@ -31,6 +31,7 @@ workloads are unchanged.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import json
 import math
 from typing import Iterator, Tuple
@@ -294,6 +295,106 @@ def flash_crowd(*, base_rps: float = 0.05, spike_rps: float = 5.0,
     return [Request(rid, t, tag) for rid, (t, tag) in enumerate(arrivals)]
 
 
+# ---------------------------------------------------------------------------
+# Production-scale multi-tenant workload (Azure-Functions-style).
+
+def _thinned_fn_stream(rng, rate_mean: float, amp: float, phase: float,
+                       period_s: float, duration_s: float,
+                       block: int = 2048) -> Iterator[float]:
+    """Arrival times of one function's inhomogeneous Poisson stream, yielded
+    in ascending order, generated block-at-a-time (Lewis-Shedler thinning
+    against the function's peak rate, vectorized per block).  Memory is one
+    block regardless of the function's daily volume."""
+    peak = rate_mean * (1.0 + amp)
+    if peak <= 0.0:
+        return
+    scale = 1.0 / peak
+    two_pi = 2.0 * math.pi
+    t = 0.0
+    while t < duration_s:
+        gaps = rng.standard_exponential(block)
+        times = t + np.cumsum(gaps * scale)
+        t = float(times[-1])
+        keep = times < duration_s
+        if amp > 0.0:
+            u = rng.random(block)
+            rate = rate_mean * (1.0 + amp * np.sin(two_pi * times / period_s
+                                                   + phase))
+            keep &= u * peak < rate
+        yield from times[keep].tolist()
+
+
+def azure_multitenant_stream(*, n_functions: int = 200,
+                             total_rps: float = 1.0, alpha: float = 1.2,
+                             duration_s: float = 86400.0,
+                             interactive_fraction: float = 0.85,
+                             diurnal_amplitude: float = 0.6,
+                             period_s: float = 86400.0, seed: int = 0,
+                             fn_prefix: str = "fn",
+                             fn_names=None) -> Iterator[Request]:
+    """Azure-Functions-style multi-tenant day of traffic, streamed.
+
+    Models the regimes production traces report (heavy-tailed function
+    popularity, per-function daily cycles, a mix of invocation classes)
+    without materializing the trace:
+
+      * **Zipf popularity**: function ``i`` (0-based) carries mean rate
+        ``total_rps * (i+1)^-alpha / Z`` — a few functions dominate, a
+        long tail barely ever fires (each tail function is a standing
+        cold-start generator, which is what makes the regime hard).
+      * **Per-function diurnal phase**: interactive functions follow a
+        sinusoidal day (amplitude ``diurnal_amplitude``) whose phase
+        offset is drawn per function — tenants peak at different hours,
+        so cluster load stays staggered rather than globally synchronous.
+      * **Invocation classes**: each function is interactive (HTTP-style,
+        diurnal) with probability ``interactive_fraction``, else batch
+        (timer/queue-style, flat rate around the clock).  Requests are
+        tagged with the class.
+
+    Yields ``Request``s in global arrival order (lazy per-function block
+    generators merged by ``heapq.merge``), with ``fn`` set to
+    ``f"{fn_prefix}{i:04d}"`` — or taken from ``fn_names`` (which also
+    fixes ``n_functions``) when a deployed fleet supplies its spec names.
+    Peak memory is O(n_functions * block), no matter how many requests
+    the day holds.  Deterministic in ``seed``: every function draws from
+    its own ``SeedSequence([seed, i])`` child stream, so the trace is
+    reproducible, insensitive to consumption order, and independent of
+    the names chosen.
+    """
+    if fn_names is not None:
+        fn_names = list(fn_names)
+        n_functions = len(fn_names)
+    if n_functions < 1:
+        raise ValueError("n_functions must be >= 1")
+    if not 0.0 <= diurnal_amplitude <= 1.0:
+        raise ValueError("diurnal_amplitude must be in [0, 1]")
+    weights = np.arange(1, n_functions + 1, dtype=np.float64) ** -alpha
+    weights /= weights.sum()
+    two_pi = 2.0 * math.pi
+
+    def fn_stream(i: int) -> Iterator[tuple]:
+        rng = np.random.default_rng(np.random.SeedSequence([seed, i]))
+        # per-function identity draws first, then the arrival stream —
+        # one child stream per function keeps the whole trace reproducible
+        phase = float(rng.uniform(0.0, two_pi))
+        interactive = bool(rng.random() < interactive_fraction)
+        amp = diurnal_amplitude if interactive else 0.0
+        tag = "interactive" if interactive else "batch"
+        name = fn_names[i] if fn_names is not None else f"{fn_prefix}{i:04d}"
+        for t in _thinned_fn_stream(rng, total_rps * float(weights[i]), amp,
+                                    phase, period_s, duration_s):
+            yield (t, i, tag, name)
+
+    streams = [fn_stream(i) for i in range(n_functions)]
+    for rid, (t, _i, tag, name) in enumerate(heapq.merge(*streams)):
+        yield Request(rid, t, tag, name)
+
+
+def azure_multitenant(**kwargs) -> list:
+    """Materialized ``azure_multitenant_stream`` (for small scales)."""
+    return list(azure_multitenant_stream(**kwargs))
+
+
 TRACE_SCHEMA_VERSION = 1
 
 
@@ -311,10 +412,49 @@ def save_trace(requests: list, path: str) -> None:
         json.dump(trace_to_dict(requests), f, indent=1)
 
 
+def save_trace_jsonl(requests, path: str) -> None:
+    """Write a trace as JSONL — a header line, then one request per line —
+    consuming ``requests`` lazily, so a generator (e.g.
+    ``azure_multitenant_stream``) streams straight to disk without the
+    one-giant-JSON-list memory spike of ``save_trace``.
+    ``trace_replay(path)`` (eager) and ``iter_trace_jsonl(path)`` (lazy)
+    both read it back; round-trip is exact (IEEE-754 doubles survive
+    JSON)."""
+    dumps = json.dumps
+    with open(path, "w") as f:
+        f.write(dumps({"version": TRACE_SCHEMA_VERSION,
+                       "format": "jsonl"}) + "\n")
+        for r in requests:
+            f.write(dumps({"rid": r.rid, "arrival_s": r.arrival_s,
+                           "tag": r.tag, "fn": r.fn},
+                          separators=(",", ":")) + "\n")
+
+
+def iter_trace_jsonl(path: str) -> Iterator[Request]:
+    """Lazily yield requests from a ``save_trace_jsonl`` file in file
+    order (generators write in arrival order, so the stream feeds
+    ``ClusterSimulator.run`` directly without materializing the trace)."""
+    with open(path) as f:
+        header = json.loads(f.readline())
+        version = header.get("version")
+        if version != TRACE_SCHEMA_VERSION:
+            raise ValueError(f"unsupported trace version {version!r} "
+                             f"(expected {TRACE_SCHEMA_VERSION})")
+        for line in f:
+            r = json.loads(line)
+            yield Request(rid=int(r["rid"]), arrival_s=float(r["arrival_s"]),
+                          tag=r.get("tag", ""), fn=r.get("fn", ""))
+
+
 def trace_replay(source) -> list:
-    """Load a trace from ``save_trace`` output: a path, a file-like object,
-    or an already-parsed dict.  Requests come back sorted by arrival time
-    with their recorded rid/tag/fn intact."""
+    """Load a trace from ``save_trace`` or ``save_trace_jsonl`` output: a
+    path (``.jsonl`` selects the line-oriented reader), a file-like
+    object, or an already-parsed dict.  Requests come back sorted by
+    arrival time with their recorded rid/tag/fn intact."""
+    if isinstance(source, str) and source.endswith(".jsonl"):
+        reqs = list(iter_trace_jsonl(source))
+        reqs.sort(key=lambda r: (r.arrival_s, r.rid))
+        return reqs
     if isinstance(source, str):
         with open(source) as f:
             payload = json.load(f)

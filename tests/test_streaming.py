@@ -1,0 +1,297 @@
+"""Production-scale streaming path: quantile-sketch accuracy, chunked and
+folded record sinks vs the monolithic sink, the Azure-style multi-tenant
+generator, the fused fast event loop's bit-parity with the general loop,
+and the bounded-memory guarantee of a streamed day (subprocess RSS gate)."""
+import dataclasses
+import itertools
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro.core.container as container_mod
+from repro.core import metrics
+from repro.core.cluster import ClusterSimulator
+from repro.core.cluster.events import (RECORD_FIELDS, RecordArray,
+                                       StreamingRecordArray)
+from repro.core.function import FunctionSpec, Handler
+from repro.core.metrics import QuantileSketch
+from repro.core.workload import azure_multitenant_stream, poisson
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+H = Handler(name="t", base_cpu_seconds=0.2, bootstrap_cpu_seconds=1.0,
+            package_mb=45.0, peak_memory_mb=100.0)
+
+
+def _spec(m=1024, name="t"):
+    h = H if name == "t" else dataclasses.replace(H, name=name)
+    return FunctionSpec(handler=h, memory_mb=m)
+
+
+def _reset_cids():
+    """Container ids come from a module-global counter; reset it so two runs
+    allocate identical ids and records compare bit-for-bit."""
+    container_mod._ids = itertools.count()
+
+
+# --------------------------------------------------- sketch accuracy (fuzz)
+def _bimodal(rng, n):
+    """The simulator's actual latency shape: a tight warm mode and a cold
+    mode ~10x higher — the adversarial case for interpolating sketches."""
+    warm = 0.35 * rng.lognormal(0.0, 0.03, n)
+    cold = 3.8 * rng.lognormal(0.0, 0.03, n)
+    return np.where(rng.random(n) < 0.9, warm, cold)
+
+
+@pytest.mark.parametrize("dist", [
+    lambda rng, n: rng.lognormal(0.0, 1.0, n),
+    lambda rng, n: rng.exponential(2.0, n),
+    lambda rng, n: rng.uniform(0.01, 10.0, n),
+    _bimodal,
+], ids=["lognormal", "exponential", "uniform", "bimodal"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sketch_quantiles_within_one_percent(dist, seed):
+    rng = np.random.default_rng(seed)
+    vals = dist(rng, 50_000)
+    sk = QuantileSketch(alpha=0.001)
+    # feed in uneven chunks, like the streaming sink does
+    i = 0
+    for size in itertools.cycle([1, 7, 4096, 333]):
+        if i >= vals.size:
+            break
+        sk.update(vals[i:i + size])
+        i += size
+    assert sk.n == vals.size
+    for q in (0.5, 0.9, 0.95, 0.99):
+        exact = float(np.quantile(vals, q))
+        est = sk.quantile(q)
+        assert abs(est - exact) / exact <= 0.01, (q, est, exact)
+    assert sk.quantile(0.0) == float(vals.min())
+    assert sk.quantile(1.0) == float(vals.max())
+
+
+def test_sketch_state_chunking_invariant():
+    """Bucket counts are exact integers, so any chunking of the same value
+    stream must produce identical quantiles — not just close ones."""
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(0.0, 1.5, 10_000)
+    one = QuantileSketch()
+    one.update(vals)
+    many = QuantileSketch()
+    for chunk in np.array_split(vals, 137):
+        many.update(chunk)
+    assert one.n == many.n
+    for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        assert one.quantile(q) == many.quantile(q)
+
+
+# ------------------------------------- chunked sink vs monolithic, fold sink
+_CHURN = dict(keepalive_s=75.0, seed=3)   # gaps straddle the TTL: cold
+                                          # starts, evictions, warm reuse
+
+
+def _churn_trace():
+    return list(poisson(0.02, 100_000.0, seed=1))
+
+
+def test_hold_mode_chunked_sink_byte_identical_to_monolithic():
+    trace = _churn_trace()
+    _reset_cids()
+    plain = ClusterSimulator(_spec(), **_CHURN).run(trace)
+    _reset_cids()
+    sink = StreamingRecordArray(chunk_size=97, mode="hold")
+    chunked = ClusterSimulator(_spec(), record_sink=sink,
+                               **_CHURN).run(trace)
+    assert len(plain) == len(chunked) == len(trace)
+    assert list(plain) == list(chunked)
+    for f in ("arrival_s", "end_s", "cost", "container_id"):
+        assert np.array_equal(plain.column(f), chunked.column(f))
+
+
+def test_fold_mode_summary_matches_exact_within_one_percent():
+    trace = _churn_trace()
+    _reset_cids()
+    exact = metrics.summarize(ClusterSimulator(_spec(), **_CHURN).run(trace))
+    _reset_cids()
+    sink = StreamingRecordArray(chunk_size=256, mode="fold")
+    folded_records = ClusterSimulator(_spec(), record_sink=sink,
+                                      **_CHURN).run(trace)
+    folded = metrics.summarize(folded_records)
+    # counts and sums are exact; percentiles carry the sketch's bound
+    assert folded.n == exact.n
+    assert folded.n_cold == exact.n_cold
+    assert folded.total_cost == pytest.approx(exact.total_cost, rel=1e-9)
+    assert folded.mean_response_s == pytest.approx(exact.mean_response_s,
+                                                   rel=1e-9)
+    assert folded.max_s == exact.max_s
+    for name in ("p50_s", "p95_s", "p99_s"):
+        f, e = getattr(folded, name), getattr(exact, name)
+        assert abs(f - e) / e <= 0.01, (name, f, e)
+    # row access is gone by design in fold mode
+    with pytest.raises(Exception):
+        folded_records[0]
+
+
+# ------------------------------------------------- multi-tenant generator
+_GEN = dict(n_functions=40, total_rps=2.0, alpha=1.2, duration_s=20_000.0,
+            seed=5)
+
+
+def test_azure_stream_deterministic_sorted_and_tagged():
+    t1 = list(azure_multitenant_stream(**_GEN))
+    t2 = list(azure_multitenant_stream(**_GEN))
+    assert t1 == t2
+    assert t1 != list(azure_multitenant_stream(**{**_GEN, "seed": 6}))
+    assert [r.rid for r in t1] == list(range(len(t1)))
+    arrivals = [r.arrival_s for r in t1]
+    assert arrivals == sorted(arrivals)
+    assert all(0.0 <= t < _GEN["duration_s"] for t in arrivals)
+    assert {r.tag for r in t1} <= {"interactive", "batch"}
+
+
+def test_azure_stream_zipf_popularity_orders_functions():
+    t = list(azure_multitenant_stream(**_GEN))
+    counts = [0] * _GEN["n_functions"]
+    for r in t:
+        counts[int(r.fn[2:])] += 1
+    # Zipf(1.2) over 40 functions: the head dominates, the tail trickles
+    assert counts[0] > 5 * counts[-1]
+    assert counts[0] > counts[5] > counts[-1]
+    # empirical total close to the configured aggregate rate (diurnal
+    # phases average out over many functions)
+    rate = len(t) / _GEN["duration_s"]
+    assert rate == pytest.approx(_GEN["total_rps"], rel=0.15)
+
+
+def test_azure_stream_fn_names_rename_only():
+    """Deployed-fleet names relabel the streams without disturbing any
+    draw: same arrivals, same tags, positionally renamed functions."""
+    base = list(azure_multitenant_stream(**_GEN))
+    names = [f"tenant-{i}" for i in range(_GEN["n_functions"])]
+    named = list(azure_multitenant_stream(
+        fn_names=names, **{k: v for k, v in _GEN.items()
+                           if k != "n_functions"}))
+    assert [r.arrival_s for r in named] == [r.arrival_s for r in base]
+    assert [r.tag for r in named] == [r.tag for r in base]
+    assert [r.fn for r in named] == [names[int(r.fn[2:])] for r in base]
+
+
+# ------------------------------------------- fast-loop / general-loop parity
+def _run_pair(specs, trace, **kw):
+    """(fast records, general records) for the same workload — the general
+    loop is forced by clearing the eligibility flag the constructor set."""
+    _reset_cids()
+    fast_sim = ClusterSimulator(specs, **kw)
+    assert fast_sim._fast, "workload was expected to take the fast path"
+    fast = fast_sim.run(trace)
+    _reset_cids()
+    gen_sim = ClusterSimulator(specs, **kw)
+    gen_sim._fast = False
+    general = gen_sim.run(trace)
+    return fast_sim, fast, gen_sim, general
+
+
+def test_fast_single_fleet_loop_bit_identical_to_general():
+    trace = list(poisson(0.004, 2_000_000.0, seed=0))  # sparse: TTL churn
+    fs, fast, gs, general = _run_pair(_spec(), trace, seed=0)
+    assert list(fast) == list(general)
+    assert fs.cold_starts == gs.cold_starts
+    assert fs.events == gs.events
+    assert fs.sim_end_s == gs.sim_end_s
+    assert sum(f.evictions for f in fs._fleets.values()) == \
+           sum(f.evictions for f in gs._fleets.values())
+
+
+def test_fast_multi_fleet_loop_bit_identical_to_general():
+    names = [f"f{i}" for i in range(5)]
+    specs = {n: _spec(name=n) for n in names}
+    trace = list(azure_multitenant_stream(
+        fn_names=names, total_rps=0.05, alpha=1.0, duration_s=100_000.0,
+        seed=11))
+    fs, fast, gs, general = _run_pair(specs, trace, seed=0)
+    assert len(fast) == len(trace)
+    assert list(fast) == list(general)
+    assert fs.cold_starts == gs.cold_starts
+    assert fs.events == gs.events
+
+
+def test_fast_loop_streams_iterators_identically_to_lists():
+    trace = list(poisson(0.004, 1_000_000.0, seed=2))
+    _reset_cids()
+    from_list = ClusterSimulator(_spec(), seed=0).run(trace)
+    _reset_cids()
+    from_iter = ClusterSimulator(_spec(), seed=0).run(iter(trace))
+    assert list(from_list) == list(from_iter)
+
+
+def test_fast_loop_rejects_unsorted_stream_but_sorts_lists():
+    reqs = list(poisson(0.004, 500_000.0, seed=4))
+    shuffled = list(reversed(reqs))
+    # a materialized unsorted list falls back to the general loop's sort
+    _reset_cids()
+    sorted_run = ClusterSimulator(_spec(), seed=0).run(reqs)
+    _reset_cids()
+    unsorted_run = ClusterSimulator(_spec(), seed=0).run(shuffled)
+    assert list(sorted_run) == list(unsorted_run)
+    # a stream cannot be sorted lazily: that is an input error
+    with pytest.raises(ValueError, match="arrival order"):
+        ClusterSimulator(_spec(), seed=0).run(iter(shuffled))
+
+
+def test_nondefault_stacks_bypass_the_fast_loop():
+    sim = ClusterSimulator(_spec(), keepalive="adaptive")
+    assert not sim._fast
+    sim = ClusterSimulator(_spec(), concurrency=4)
+    assert not sim._fast
+
+
+# ------------------------------------------------ bounded-memory end to end
+@pytest.mark.slow
+def test_streamed_day_runs_in_bounded_memory():
+    """A streamed multi-tenant trace into a fold sink must complete with
+    peak RSS far below what materializing the trace + records would need
+    (~0.5 GiB at this size); the subprocess also proves the folded
+    percentiles land within the sketch bound of plausible latencies."""
+    code = """
+import json, sys
+from benchmarks.simloop_bench import peak_rss_mb
+from repro.core import metrics
+from repro.core.cluster import ClusterSimulator
+from repro.core.cluster.events import StreamingRecordArray
+from repro.core.function import FunctionSpec, Handler
+from repro.core.workload import azure_multitenant_stream
+
+h = Handler(name="t", base_cpu_seconds=0.2, bootstrap_cpu_seconds=1.0,
+            package_mb=45.0, peak_memory_mb=100.0)
+spec = FunctionSpec(handler=h, memory_mb=1024)
+trace = azure_multitenant_stream(n_functions=1, total_rps=20.0,
+                                 diurnal_amplitude=0.0,
+                                 duration_s=20_000.0, seed=0,
+                                 fn_names=[spec.name])
+sink = StreamingRecordArray(mode="fold")
+sim = ClusterSimulator(spec, record_sink=sink, seed=0)
+records = sim.run(trace)
+s = metrics.summarize(records)
+print(json.dumps({
+    "n": s.n,
+    "p95_s": s.p95_s,
+    # VmHWM, not ru_maxrss: the latter survives exec on Linux, so it
+    # reports the *test runner's* peak when the suite runs JAX first
+    "rss_mb": peak_rss_mb(),
+}))
+"""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(REPO, "src"), REPO]))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    row = json.loads(out.stdout)
+    assert row["n"] > 300_000            # a real day's worth of requests
+    assert 0.0 < row["p95_s"] < 60.0
+    # interpreter + numpy floor is ~40 MiB; 400k materialized records
+    # alone would add hundreds more.  250 MiB is loose but diagnostic.
+    assert row["rss_mb"] < 250, row

@@ -95,6 +95,31 @@ def test_trace_replay_round_trips_through_json_file(tmp_path):
     assert trace_replay(json.loads(open(path).read())) == trace
 
 
+def test_trace_jsonl_round_trips_lazily(tmp_path):
+    from repro.core.workload import (azure_multitenant_stream,
+                                     iter_trace_jsonl, save_trace_jsonl)
+    trace = list(azure_multitenant_stream(n_functions=10, total_rps=1.0,
+                                          duration_s=2000.0, seed=4))
+    path = str(tmp_path / "trace.jsonl")
+    # the writer consumes a generator — nothing is materialized on save
+    save_trace_jsonl(azure_multitenant_stream(n_functions=10, total_rps=1.0,
+                                              duration_s=2000.0, seed=4),
+                     path)
+    assert trace_replay(path) == trace          # eager .jsonl dispatch
+    lazy = iter_trace_jsonl(path)
+    assert next(lazy) == trace[0]               # lazy reader, exact floats
+    assert [trace[0]] + list(lazy) == trace
+
+
+def test_trace_jsonl_rejects_unknown_schema_version(tmp_path):
+    from repro.core.workload import iter_trace_jsonl
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"version": 99, "format": "jsonl"}) + "\n")
+    with pytest.raises(ValueError):
+        list(iter_trace_jsonl(path))
+
+
 def test_trace_replay_rejects_unknown_schema_version():
     payload = trace_to_dict([Request(0, 1.0)])
     payload["version"] = 99
