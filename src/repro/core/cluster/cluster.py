@@ -47,7 +47,7 @@ from repro.core.cluster.policies import (ColdStartPolicy, FixedTTL, FullCold,
                                          make_scaling)
 from repro.core.cluster.router import BarePool, BatchingConfig, Fleet, Router
 from repro.core.container import Container, Phase, State
-from repro.core.function import FunctionSpec, Handler
+from repro.core.function import FunctionSpec, Handler, batch_rel_cost
 from repro.core.workload import Request
 from repro.serving.batcher import PendingRequest
 
@@ -213,10 +213,15 @@ class ClusterSimulator:
                       and not self._lazy_evict and not self._track_arrivals
                       and not self._phased and self.concurrency == 1
                       and not self.max_containers and self.pool is None
-                      and all(f.batcher is None for f in fleets.values()))
+                      and all(f.batcher is None for f in fleets.values())
+                      # bill-idle (GPU serverless) fleets need per-eviction
+                      # up-time accounting the fused loops skip
+                      and not any(f.bill_idle for f in fleets.values()))
         self._pool_spec: Optional[FunctionSpec] = None
-        self.mitigation_cost = 0.0  # snapshot storage + pool idle ($, filled
-        self.sim_end_s = 0.0        #  by run()'s finalization)
+        self.mitigation_cost = 0.0  # snapshot storage + pool idle + idle
+        self.sim_end_s = 0.0        #  GPU capacity ($, by _finalize)
+        self.idle_capacity_cost = 0.0  # bill-idle fleets: capacity $ beyond
+                                       # the exec ticks already billed
 
     # ------------------------------------------------------------- accessors
     @property
@@ -267,7 +272,14 @@ class ClusterSimulator:
         fleet.add_container(c)
         self._active_n += 1
 
-    def _evict(self, fleet: Fleet, cid: int) -> None:
+    def _evict(self, fleet: Fleet, cid: int, t: float = 0.0) -> None:
+        if fleet.bill_idle:
+            # per-second provider billing covers the container's whole
+            # up-time; settle it at eviction (live containers settle in
+            # _finalize)
+            c = fleet.containers.get(cid)
+            if c is not None:
+                fleet.up_seconds += max(0.0, t - c.created_at)
         fleet.evict(cid)
         if self._drop_evicted:
             del fleet.containers[cid]
@@ -919,8 +931,13 @@ class ClusterSimulator:
         return self.records
 
     def _finalize(self, t_end: float) -> None:
-        """Settle the platform-side mitigation spend (snapshot storage held
-        to end of run, bare-pool idle) — zero under FullCold."""
+        """Settle the platform-side spend beyond the per-request exec bills:
+        mitigation costs (snapshot storage held to end of run, bare-pool
+        idle — zero under FullCold) and, for bill-idle providers (GPU
+        serverless), the capacity remainder — per-second billing of each
+        container's whole up-time minus the exec ticks the records already
+        carry.  Both fold into ``mitigation_cost``, which the suite reports
+        as ``mitigation_per_1k``."""
         self.sim_end_s = t_end
         fin = getattr(self.records, "finalize", None)
         if fin is not None:
@@ -932,7 +949,16 @@ class ClusterSimulator:
         for _fn, size_mb, written_at in self.coldstart.snapshots():
             cost += billing.snapshot_storage_cost(
                 size_mb, max(0.0, t_end - written_at))
-        self.mitigation_cost = cost
+        cap = 0.0
+        for f in self._fleets.values():
+            if not f.bill_idle:
+                continue
+            up = f.up_seconds
+            for cid in f.live:
+                up += max(0.0, t_end - f.containers[cid].created_at)
+            cap += max(0.0, up * f.per_second_usd - f.billed_cost)
+        self.idle_capacity_cost = cap
+        self.mitigation_cost = cost + cap
 
     # ------------------------------------------------------------- complete
     def _on_complete(self, t: float, payload) -> None:
@@ -961,7 +987,7 @@ class ClusterSimulator:
         if ttl is None:
             ttl = self.keepalive.ttl(fname)
         if t - c.last_used_at >= ttl - 1e-9:
-            self._evict(fleet, cid)
+            self._evict(fleet, cid, t)
         else:
             # Not yet expired under the *current* TTL (it may have grown, or
             # the container was reused).  A reuse already scheduled a later
@@ -1076,7 +1102,7 @@ class ClusterSimulator:
             c = containers.get(cid)
             if c is not None and c.state == State.WARM and \
                     now - c.last_used_at >= ttl - 1e-9:
-                self._evict(fleet, cid)
+                self._evict(fleet, cid, now)
 
     def _candidates(self, fleet: Fleet, now: float) -> list:
         if self._lazy_evict:
@@ -1144,7 +1170,13 @@ class ClusterSimulator:
         exec_s = self._jit(fleet.warm_exec_s)
         b = len(reqs)
         if b > 1:
-            exec_s *= 1.0 + fleet.batching.amortization * (b - 1)
+            curve = fleet.batch_curve
+            if curve is None:
+                exec_s *= 1.0 + fleet.batching.amortization * (b - 1)
+            else:
+                # measured batch-efficiency: a fused batch of b costs
+                # b * rel_per_request(b) of a single pass
+                exec_s *= b * batch_rel_cost(curve, b)
         if concurrency > 1:
             # with concurrency 1 a dispatch target never has work in
             # flight (idle or freshly created), so k == 1 always
@@ -1213,6 +1245,10 @@ class ClusterSimulator:
         if ticks < 1:
             ticks = 1
         cost = ticks * fleet.price_100ms
+        if fleet.bill_idle:
+            # remember the exec $ billed so _finalize can charge only the
+            # capacity remainder (up-time beyond the billed exec ticks)
+            fleet.billed_cost += cost * b
         mem = fleet.spec.memory_mb
         append_row = self.records.append_row
         if b == 1:
@@ -1243,7 +1279,7 @@ class ClusterSimulator:
                    for cid in f.live if f.containers[cid].state == State.WARM]
         if victims:
             _, vcid, vfleet = min(victims)
-            self._evict(vfleet, vcid)
+            self._evict(vfleet, vcid, t)
             return True
         ends = [f.earliest_free_s() for f in self.fleets.values()]
         ends = [e for e in ends if e is not None]

@@ -488,5 +488,9 @@ def make_scaling(s) -> ScalingPolicy:
 
 
 def warm_exec_estimate(spec) -> float:
-    """Deterministic warm service-time estimate for scaling decisions."""
-    return resources.exec_time(spec.handler.base_cpu_seconds, spec.memory_mb)
+    """Deterministic warm service-time estimate for scaling decisions,
+    under the spec's provider profile (a GPU-serverless container gets the
+    whole host, not a memory-proportional share)."""
+    from repro.core import providers
+    return providers.get(getattr(spec, "provider", "lambda")).exec_time(
+        spec.handler.base_cpu_seconds, spec.memory_mb)

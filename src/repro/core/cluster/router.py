@@ -19,9 +19,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core import billing, resources
+from repro.core import providers
 from repro.core.container import Container, State, cold_start_breakdown
-from repro.core.function import FunctionSpec
+from repro.core.function import FunctionSpec, normalize_batch_curve
 from repro.serving.batcher import Batcher
 
 
@@ -62,15 +62,28 @@ class Fleet:
         self.pending_prewarms = 0
         self.cold_starts = 0
         self.evictions = 0
-        # ---- hot-path caches: all three are pure functions of the spec,
-        # recomputed per event before PR 5 (the sim loop's most-repeated
-        # redundant work after _active_total)
-        self.warm_exec_s = resources.exec_time(spec.handler.base_cpu_seconds,
-                                               spec.memory_mb)
+        # ---- hot-path caches: all pure functions of the spec, recomputed
+        # per event before PR 5 (the sim loop's most-repeated redundant
+        # work after _active_total).  All routed through the spec's
+        # provider profile; the default "lambda" profile reproduces the
+        # pre-provider arithmetic bit-for-bit.
+        prof = providers.get(spec.provider)
+        self.warm_exec_s = prof.exec_time(spec.handler.base_cpu_seconds,
+                                          spec.memory_mb)
         self.cold_bd = cold_start_breakdown(spec)
         self.cold_total_s = self.cold_bd.total_s
-        self.price_100ms = billing.price_per_100ms(spec.memory_mb)
+        self.price_100ms = prof.price_per_100ms(spec.memory_mb)
         self.memory_mb = spec.memory_mb
+        # measured batch-efficiency curve (modern handlers); None keeps the
+        # analytic amortization model in the cluster's batching path
+        self.batch_curve = (normalize_batch_curve(spec.handler.batch_curve)
+                            or None)
+        # provider-side capacity billing (GPU serverless: the container
+        # bills per-second for its whole up-time, idle included)
+        self.bill_idle = prof.bill_idle
+        self.per_second_usd = prof.per_second_usd
+        self.up_seconds = 0.0       # settled container up-time (evictions)
+        self.billed_cost = 0.0      # exec $ already billed to requests
         # set on evict(): the idle list may hold a dead cid, so the next
         # _candidates call must prune.  While clear, idle holds only WARM
         # containers and pruning is skipped (the common case).

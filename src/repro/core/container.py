@@ -38,7 +38,7 @@ import dataclasses
 import enum
 import itertools
 
-from repro.core import resources
+from repro.core import providers, resources
 from repro.core.function import FunctionSpec
 
 _ids = itertools.count()
@@ -96,9 +96,11 @@ _PARKED_STATE = {
 
 # provision-time model: fixed sandbox work + mild tier dependence (network /
 # image pull gets a proportional share too).  Values sit in the 2017 ranges
-# reported by the paper's figures (cold - warm gap of ~1.5-4 s).
-PROVISION_BASE_S = 0.9
-PROVISION_TIER_S = 0.55   # divided by cpu_share
+# reported by the paper's figures (cold - warm gap of ~1.5-4 s).  These are
+# the Lambda profile's numbers; other providers carry their own in
+# ``repro.core.providers`` (GPU serverless provisions in seconds, flat).
+PROVISION_BASE_S = providers.LAMBDA_PROVISION_BASE_S
+PROVISION_TIER_S = providers.LAMBDA_PROVISION_TIER_S   # divided by cpu_share
 
 
 @dataclasses.dataclass(slots=True)
@@ -118,13 +120,23 @@ class ColdStartBreakdown:
 
 
 def cold_start_breakdown(spec: FunctionSpec) -> ColdStartBreakdown:
+    """Per-phase cold-start anatomy under the spec's provider profile.
+
+    LOAD = package read at the provider's I/O share plus the handler's
+    measured CPU-bound load work (param init + jit compile for modern
+    engines; 0 for the paper CNNs, preserving the original I/O-only LOAD).
+    The default ``lambda`` provider reproduces the pre-provider arithmetic
+    exactly (bit-parity with the PR-1 goldens)."""
     m = spec.memory_mb
     h = spec.handler
-    share = resources.cpu_share(m)
+    prof = providers.get(spec.provider)
+    load_s = prof.load_time(h.package_mb, m)
+    if h.load_cpu_seconds:
+        load_s += prof.exec_time(h.load_cpu_seconds, m)
     return ColdStartBreakdown(
-        provision_s=PROVISION_BASE_S + PROVISION_TIER_S / max(share, 0.25),
-        bootstrap_s=resources.exec_time(h.bootstrap_cpu_seconds, m),
-        load_s=resources.load_time(h.package_mb, m),
+        provision_s=prof.provision_s(m),
+        bootstrap_s=prof.exec_time(h.bootstrap_cpu_seconds, m),
+        load_s=load_s,
     )
 
 

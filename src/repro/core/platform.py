@@ -142,14 +142,34 @@ class ServerlessPlatform:
         handler name so one model can back many tenant functions (the
         multi-tenant fleet deploys hundreds of functions over three
         models) without their specs colliding in ``self.functions``."""
-        h = calibration.paper_handler(variant, calibrated=self._cal,
-                                      use_fallback=self._fallback)
+        return self.deploy_model(variant, memory_mb, name=name)
+
+    def deploy_model(self, model: str, memory_mb: int,
+                     name: Optional[str] = None,
+                     provider: str = "lambda") -> FunctionSpec:
+        """Deploy any calibrated model: a paper CNN by variant name, or a
+        ``repro.configs.registry`` arch id served through the modern
+        engine handler (per-model phase costs + batch-efficiency curve
+        from the calibration cache; pinned fallbacks when the platform
+        runs fallback-calibrated).  ``provider`` picks the
+        ``repro.core.providers`` profile the function runs on."""
+        if model in calibration.PAPER_MODELS:
+            h = calibration.paper_handler(model, calibrated=self._cal,
+                                          use_fallback=self._fallback)
+        else:
+            if not self._fallback and model not in (
+                    self._cal or {}).get("models", {}):
+                self._cal = calibration.ensure_measured(self._cal, model)
+            h = calibration.modern_handler(model, calibrated=self._cal,
+                                           use_fallback=self._fallback)
         if name is not None:
             h = dataclasses.replace(h, name=name)
-        return self.deploy(h, memory_mb)
+        return self.deploy(h, memory_mb, provider=provider)
 
-    def deploy(self, handler: Handler, memory_mb: int) -> FunctionSpec:
-        spec = FunctionSpec(handler=handler, memory_mb=memory_mb)
+    def deploy(self, handler: Handler, memory_mb: int,
+               provider: str = "lambda") -> FunctionSpec:
+        spec = FunctionSpec(handler=handler, memory_mb=memory_mb,
+                            provider=provider)
         self.functions[spec.name] = spec
         return spec
 

@@ -406,8 +406,10 @@ def run_stack(specs, trace, stack: PolicyStack, *, seed: int = 0, sla=None,
     calls are bit-identical.
 
     ``cost_per_1k`` folds in the platform-side mitigation spend (snapshot
-    storage, bare-pool idle — zero under ``full``), also broken out as
-    ``mitigation_per_1k``.
+    storage, bare-pool idle — zero under ``full`` — plus, on bill-idle
+    provider profiles like ``modal_gpu``, the idle-capacity surcharge:
+    container up-time billed per-second minus the exec ticks already
+    billed to requests), also broken out as ``mitigation_per_1k``.
     """
     from repro.core import metrics
     from repro.core.cluster import ClusterSimulator

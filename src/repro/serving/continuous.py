@@ -7,7 +7,9 @@ slot is immediately refilled from the queue — no waiting for the whole batch,
 which is what turns the paper's per-request serving economics into sustained
 throughput (DESIGN.md §4, "batching is first-class").
 
-Transformer-family models (dense / vlm).  Greedy decoding.
+Transformer-family models (dense / moe / vlm).  Greedy decoding.
+``repro.core.calibration`` drives this server to measure per-model
+batch-efficiency curves (fused-step wall time at a pinned slot count).
 """
 from __future__ import annotations
 
@@ -65,6 +67,22 @@ class ContinuousServer:
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def n_active(self) -> int:
+        """Slots currently holding an in-flight sequence."""
+        return int(self.active.sum())
+
+    @property
+    def steps(self) -> int:
+        """Fused decode steps taken so far (the throughput denominator)."""
+        return self._steps
+
+    def prefill_pending(self) -> None:
+        """Admit queued requests into free slots (prefill each, copy its
+        cache into the slot) without decoding — the calibration driver uses
+        this to pin an exact active-slot count before timing ``step()``,
+        and tests use it to assert the slot-refill invariants."""
+        self._admit()
 
     def _admit(self):
         for s in range(self.slots):

@@ -43,12 +43,20 @@ def measure_engine(cfg: ModelConfig, *, batch: int = 2, prompt: int = 16,
 
 def llm_handler(cfg: ModelConfig, measured: dict | None = None,
                 **measure_kw) -> Handler:
+    """Ad-hoc handler from a one-off ``measure_engine`` pass.
+
+    For registry models prefer ``repro.core.calibration.modern_handler``,
+    which reads the versioned per-model calibration cache (schema v2) and
+    carries the measured ``ContinuousServer`` batch-efficiency curve.
+    """
     m = measured or measure_engine(cfg, **measure_kw)
     return Handler(
         name=f"serve-{cfg.name}",
         base_cpu_seconds=float(m["serve_batch_s"]),
-        # jit compile + weight load plays the bootstrap+load role
-        bootstrap_cpu_seconds=float(m["compile_s"]),
+        # jax + XLA import; weight init + jit compile are LOAD-phase CPU
+        # work so the staged cold-start model prices them per-tier
+        bootstrap_cpu_seconds=1.0,
         package_mb=min(float(m["package_mb"]), 510.0),
         peak_memory_mb=128.0,
+        load_cpu_seconds=float(m["load_s"]) + float(m["compile_s"]),
     )

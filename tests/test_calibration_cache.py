@@ -1,0 +1,201 @@
+"""Property tests for the v2 calibration cache: schema round-trip,
+batch-efficiency curve invariants, and the refusal semantics (a
+version- or fingerprint-mismatched cache is re-measured, never mixed)."""
+import json
+
+import pytest
+
+# Unlike test_properties.py this module is not all-hypothesis: the refusal
+# and handler tests below must run everywhere, so only the @given tests
+# skip when hypothesis is missing.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+from repro.core import calibration as cal
+from repro.core.function import batch_rel_cost, normalize_batch_curve
+
+FAKE_ENTRY = {"kind": "cnn", "warm_exec_s": 0.5, "first_call_s": 1.0}
+
+
+def _stub_measure(monkeypatch):
+    calls = []
+
+    def fake(name, **kw):
+        calls.append(name)
+        return dict(FAKE_ENTRY)
+
+    monkeypatch.setattr(cal, "measure_model", fake)
+    return calls
+
+
+# ---------------------------------------------- hypothesis property tests
+if HAS_HYPOTHESIS:
+    entries = st.dictionaries(
+        st.sampled_from(sorted(cal.PAPER_MODELS)
+                        + sorted(cal.MODERN_MODELS)),
+        st.fixed_dictionaries({"kind": st.just("cnn"),
+                               "warm_exec_s": st.floats(1e-4, 10.0),
+                               "first_call_s": st.floats(1e-4, 10.0)}),
+        max_size=4)
+    raw_curves = st.lists(
+        st.tuples(st.integers(1, 64), st.floats(0.01, 4.0)),
+        min_size=1, max_size=8)
+
+    @settings(max_examples=25, deadline=None)
+    @given(entries)
+    def test_cache_round_trip(tmp_path_factory, models):
+        path = str(tmp_path_factory.mktemp("cal") / "cal.json")
+        cache = cal.new_cache()
+        cache["models"].update(models)
+        cal.save_cache(cache, path)
+        assert cal.load_cache(path) == cache
+
+    @settings(max_examples=100, deadline=None)
+    @given(raw_curves)
+    def test_normalized_curve_invariants(points):
+        curve = normalize_batch_curve(points)
+        bs = [b for b, _ in curve]
+        rels = [r for _, r in curve]
+        assert bs == sorted(set(bs)) and bs[0] == 1
+        assert rels[0] == 1.0
+        # monotone non-increasing: batching never makes a request dearer
+        assert all(a >= b for a, b in zip(rels, rels[1:]))
+        assert all(r > 0 for r in rels)
+
+    @settings(max_examples=100, deadline=None)
+    @given(raw_curves, st.integers(1, 128))
+    def test_interpolation_within_curve_bounds(points, b):
+        curve = normalize_batch_curve(points)
+        rel = batch_rel_cost(curve, b)
+        rels = [r for _, r in curve]
+        # clamped interpolation: never outside the measured endpoints
+        assert min(rels) - 1e-12 <= rel <= max(rels) + 1e-12
+        # at a measured batch size it reproduces the measurement
+        for bm, rm in curve:
+            assert batch_rel_cost(curve, bm) == pytest.approx(rm)
+
+
+# ----------------------------------- curve edge cases (hypothesis-free)
+def test_fixed_curve_samples_hold_invariants():
+    """A pinned sample of the property-test cases, so the invariants stay
+    exercised on hosts without hypothesis."""
+    for points in ([(4, 2.0)], [(1, 0.5), (2, 3.0), (2, 1.0)],
+                   [(8, 0.3), (2, 0.9), (1, 1.7), (4, 0.4)]):
+        curve = normalize_batch_curve(points)
+        bs = [b for b, _ in curve]
+        rels = [r for _, r in curve]
+        assert bs == sorted(set(bs)) and bs[0] == 1 and rels[0] == 1.0
+        assert all(a >= b for a, b in zip(rels, rels[1:]))
+        for b in (1, 3, 200):
+            assert min(rels) <= batch_rel_cost(curve, b) <= max(rels)
+
+
+def test_batch_rel_cost_empty_curve_is_flat():
+    assert batch_rel_cost((), 7) == 1.0
+
+
+def test_normalize_rejects_bad_points():
+    with pytest.raises(ValueError):
+        normalize_batch_curve([(0, 1.0)])
+    with pytest.raises(ValueError):
+        normalize_batch_curve([(2, -0.5)])
+
+
+# -------------------------------------------------------------- refusal
+def test_refuses_wrong_schema_version(tmp_path, monkeypatch):
+    calls = _stub_measure(monkeypatch)
+    path = str(tmp_path / "cal.json")
+    stale = cal.new_cache()
+    stale["schema_version"] = 1
+    stale["models"]["resnet18"] = {"kind": "cnn", "warm_exec_s": 99.0,
+                                   "first_call_s": 99.0}
+    with open(path, "w") as f:
+        json.dump(stale, f)
+    assert cal.load_cache(path) is None
+    out = cal.calibrate(path)              # falls back to re-measure
+    assert sorted(calls) == sorted(cal.PAPER_MODELS)
+    assert out["schema_version"] == cal.SCHEMA_VERSION
+    # the stale number is gone, not mixed in
+    assert out["models"]["resnet18"]["warm_exec_s"] == 0.5
+
+
+def test_refuses_foreign_host_fingerprint(tmp_path, monkeypatch):
+    calls = _stub_measure(monkeypatch)
+    path = str(tmp_path / "cal.json")
+    foreign = cal.new_cache()
+    foreign["host"] = dict(foreign["host"], node="other-box")
+    foreign["models"]["resnet18"] = {"kind": "cnn", "warm_exec_s": 99.0,
+                                     "first_call_s": 99.0}
+    cal.save_cache(foreign, path)
+    assert cal.load_cache(path) is None
+    assert cal.load_cache(path, strict=False) is not None  # opt-out exists
+    out = cal.calibrate(path)
+    assert calls and out["host"] == cal.host_fingerprint()
+    assert out["models"]["resnet18"]["warm_exec_s"] == 0.5
+    # the refusal re-measurement overwrote the foreign file
+    assert cal.load_cache(path) == out
+
+
+def test_legacy_v1_flat_file_refused(tmp_path, monkeypatch):
+    calls = _stub_measure(monkeypatch)
+    path = str(tmp_path / "cal.json")
+    with open(path, "w") as f:
+        json.dump({"resnet18": {"base_cpu_seconds": 0.123,
+                                "first_call_seconds": 1.0}}, f)
+    assert cal.load_cache(path) is None
+    cal.calibrate(path)
+    assert calls
+
+
+def test_corrupt_file_refused(tmp_path, monkeypatch):
+    _stub_measure(monkeypatch)
+    path = str(tmp_path / "cal.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert cal.load_cache(path) is None
+
+
+def test_calibrate_reads_valid_cache_without_measuring(tmp_path, monkeypatch):
+    calls = _stub_measure(monkeypatch)
+    path = str(tmp_path / "cal.json")
+    cache = cal.new_cache()
+    for m in cal.PAPER_MODELS:
+        cache["models"][m] = dict(FAKE_ENTRY, warm_exec_s=0.123)
+    cal.save_cache(cache, path)
+    out = cal.calibrate(path)
+    assert not calls                       # nothing re-measured
+    assert out["models"]["resnet18"]["warm_exec_s"] == 0.123
+
+
+def test_ensure_measured_appends_and_persists(tmp_path, monkeypatch):
+    calls = _stub_measure(monkeypatch)
+    path = str(tmp_path / "cal.json")
+    cache = cal.calibrate(path)
+    calls.clear()
+    cache = cal.ensure_measured(cache, "deepseek-7b", path)
+    assert calls == ["deepseek-7b"]
+    assert "deepseek-7b" in cal.load_cache(path)["models"]
+    cal.ensure_measured(cache, "deepseek-7b", path)   # second call: cached
+    assert calls == ["deepseek-7b"]
+
+
+# ------------------------------------------------------- handler plumbing
+def test_modern_handler_fallback_and_measured():
+    h = cal.modern_handler("deepseek-7b", use_fallback=True)
+    fb = cal.MODERN_MODELS["deepseek-7b"]["fallback"]
+    assert h.base_cpu_seconds == fb["warm_exec_s"]
+    assert h.load_cpu_seconds == pytest.approx(fb["init_s"] + fb["compile_s"])
+    assert h.batch_curve and h.batch_curve[0] == (1, 1.0)
+    cache = cal.new_cache()
+    cache["models"]["deepseek-7b"] = {
+        "kind": "llm", "warm_exec_s": 0.7, "init_s": 0.2, "compile_s": 0.3,
+        "package_mb": 5.0, "tokens_per_s": 10.0,
+        "batch_curve": [[1, 1.0], [4, 0.5]]}
+    h2 = cal.modern_handler("deepseek-7b", calibrated=cache)
+    assert h2.base_cpu_seconds == 0.7 and h2.load_cpu_seconds == 0.5
+    assert h2.batch_curve == ((1, 1.0), (4, 0.5))
+    with pytest.raises(KeyError):
+        cal.modern_handler("no-such-model", use_fallback=True)

@@ -296,11 +296,26 @@ def test_calibration_path_anchored_to_repo_root(monkeypatch, tmp_path):
 def test_calibration_env_override_read_at_call_time(monkeypatch, tmp_path):
     from repro.core import calibration
     fake = tmp_path / "cal.json"
-    fake.write_text(json.dumps({"resnet18": {"base_cpu_seconds": 0.123,
-                                             "first_call_seconds": 1.0}}))
+    cache = calibration.new_cache()
+    for m in calibration.PAPER_MODELS:
+        cache["models"][m] = {"kind": "cnn", "warm_exec_s": 0.123,
+                              "first_call_s": 1.0}
+    fake.write_text(json.dumps(cache))
     monkeypatch.setenv("REPRO_CALIBRATION", str(fake))
     out = calibration.calibrate()          # must read, not re-measure
-    assert out["resnet18"]["base_cpu_seconds"] == 0.123
+    assert out["models"]["resnet18"]["warm_exec_s"] == 0.123
+    h = calibration.paper_handler("resnet18", calibrated=out)
+    assert h.base_cpu_seconds == 0.123
+
+
+def test_cal_path_constant_deprecated(monkeypatch, tmp_path):
+    from repro.core import calibration
+    override = str(tmp_path / "other.json")
+    monkeypatch.setenv("REPRO_CALIBRATION", override)
+    with pytest.warns(DeprecationWarning):
+        # computed at access time now, so the env var set after import
+        # (the original bug) is honored
+        assert calibration.CAL_PATH == override
 
 
 # ------------------------------------------------------------ bench smoke

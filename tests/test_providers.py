@@ -1,0 +1,123 @@
+"""Provider profiles: Lambda bit-parity, the GPU-serverless cost model,
+and the cluster's idle-capacity billing for bill-idle providers."""
+import pytest
+
+from repro.core import billing, resources
+from repro.core.cluster import ClusterSimulator
+from repro.core.container import cold_start_breakdown
+from repro.core.function import FunctionSpec, Handler
+from repro.core.providers import LAMBDA, MODAL_GPU, PROVIDERS, get
+from repro.core.workload import poisson
+
+
+def _modern_handler(**kw):
+    kw.setdefault("name", "llm")
+    kw.setdefault("base_cpu_seconds", 0.05)
+    kw.setdefault("bootstrap_cpu_seconds", 1.0)
+    kw.setdefault("package_mb", 10.0)
+    kw.setdefault("peak_memory_mb", 128.0)
+    kw.setdefault("load_cpu_seconds", 2.0)
+    return Handler(**kw)
+
+
+# ---------------------------------------------------------- profile table
+def test_get_is_loud_on_unknown_provider():
+    assert get("lambda") is LAMBDA and get("modal_gpu") is MODAL_GPU
+    with pytest.raises(KeyError, match="unknown provider"):
+        get("banana_cloud")
+    with pytest.raises(KeyError):
+        FunctionSpec(handler=_modern_handler(), memory_mb=1024,
+                     provider="banana_cloud")
+
+
+def test_lambda_profile_reproduces_legacy_arithmetic():
+    """The default profile must be the pre-provider model bit-for-bit —
+    the golden-digest contract rides on this equality."""
+    for m in (128, 512, 1024, 1536):
+        assert LAMBDA.cpu_share(m) == resources.cpu_share(m)
+        assert LAMBDA.exec_time(0.35, m) == resources.exec_time(0.35, m)
+        assert LAMBDA.load_time(98.0, m) == resources.load_time(98.0, m)
+        assert LAMBDA.price_per_100ms(m) == billing.price_per_100ms(m)
+    assert not LAMBDA.full_cpu and not LAMBDA.bill_idle
+    assert LAMBDA.lambda_limits
+
+
+def test_modal_gpu_profile_shape():
+    """Flat multi-second provision, whole-host CPU, per-second pricing."""
+    assert MODAL_GPU.provision_s(1024) == MODAL_GPU.provision_s(65536) == 6.5
+    assert MODAL_GPU.cpu_share(256) == 1.0          # no memory-tier throttle
+    assert MODAL_GPU.exec_time(0.35, 256) == 0.35
+    assert MODAL_GPU.price_per_100ms(16384) == \
+        pytest.approx(0.00376 * billing.TICK_S)
+    assert MODAL_GPU.bill_idle and not MODAL_GPU.lambda_limits
+    assert MODAL_GPU.scaledown_s == 300.0
+    assert set(PROVIDERS) == {"lambda", "modal_gpu"}
+
+
+def test_non_lambda_provider_skips_lambda_limits():
+    big = _modern_handler(package_mb=4096.0)        # > Lambda's 512 MB cap
+    spec = FunctionSpec(handler=big, memory_mb=16384, provider="modal_gpu")
+    assert spec.memory_mb == 16384                  # not a Lambda tier
+    with pytest.raises(ValueError, match="512"):
+        FunctionSpec(handler=big, memory_mb=1024)
+    with pytest.raises(ValueError, match="OOM"):    # peak check still on
+        FunctionSpec(handler=_modern_handler(peak_memory_mb=999999.0),
+                     memory_mb=16384, provider="modal_gpu")
+
+
+def test_cold_breakdown_carries_load_cpu_seconds():
+    h = _modern_handler()
+    lam = cold_start_breakdown(FunctionSpec(handler=h, memory_mb=1024))
+    gpu = cold_start_breakdown(FunctionSpec(handler=h, memory_mb=1024,
+                                            provider="modal_gpu"))
+    # LOAD = package read + the measured init/compile CPU work
+    assert lam.load_s == pytest.approx(
+        resources.load_time(10.0, 1024) + resources.exec_time(2.0, 1024))
+    assert gpu.provision_s == 6.5
+    assert gpu.bootstrap_s == 1.0                   # full CPU
+    assert gpu.load_s == pytest.approx(10.0 / 1000.0 + 2.0)
+    # the modern cold is dominated by provision + init/compile
+    assert gpu.total_s == pytest.approx(6.5 + 1.0 + 10.0 / 1000.0 + 2.0)
+
+
+# --------------------------------------------------- idle-capacity billing
+def _gpu_sim(**kw):
+    spec = FunctionSpec(handler=_modern_handler(), memory_mb=16384,
+                        provider="modal_gpu")
+    return spec, ClusterSimulator(spec, seed=0, jitter=0.0, **kw)
+
+
+def test_bill_idle_fleet_disables_fast_path_and_charges_capacity():
+    spec, sim = _gpu_sim(keepalive_s=300.0)
+    assert not sim._fast                 # capacity accounting needs _evict
+    recs = sim.run(poisson(0.01, 20_000.0, seed=3))
+    assert recs
+    assert sim.idle_capacity_cost > 0.0
+    assert sim.mitigation_cost == pytest.approx(sim.idle_capacity_cost)
+    fleet = next(iter(sim.fleets.values()))
+    # capacity surcharge ~ up-time * rate minus the exec ticks billed
+    assert fleet.billed_cost > 0.0
+    total_up = fleet.up_seconds
+    assert total_up > 0.0
+    assert sim.idle_capacity_cost <= total_up * MODAL_GPU.per_second_usd
+
+
+def test_lambda_fleet_keeps_fast_path_and_zero_capacity_cost():
+    spec = FunctionSpec(handler=Handler(name="cnn", base_cpu_seconds=0.35),
+                        memory_mb=1024)
+    sim = ClusterSimulator(spec, seed=0, jitter=0.0, keepalive_s=300.0)
+    assert sim._fast
+    sim.run(poisson(0.01, 20_000.0, seed=3))
+    assert sim.idle_capacity_cost == 0.0
+
+
+def test_gpu_idle_cost_grows_with_ttl():
+    """Longer keep-alive = more idle GPU-seconds billed: the cost half of
+    the gpu_serverless scenario's cold-rate/cost trade-off."""
+    _, short = _gpu_sim(keepalive_s=60.0)
+    _, long = _gpu_sim(keepalive_s=1800.0)
+    trace = poisson(0.005, 40_000.0, seed=5)
+    short.run(list(trace))
+    long.run(list(trace))
+    assert long.idle_capacity_cost > short.idle_capacity_cost
+    assert long.cold_starts < short.cold_starts

@@ -1,0 +1,72 @@
+"""Sim-to-real replay parity: the harness must emit the pinned report
+schema with finite error metrics inside its own documented (loose, CPU)
+tolerances — the closing check of the calibration loop."""
+import math
+
+import pytest
+
+from benchmarks.replay_real import TOLERANCES, replay
+from repro.core import calibration
+from repro.core.scenarios import POLICY_STACKS
+
+REPORT_KEYS = {"schema_version", "scenario", "stack", "scale", "n_requests",
+               "model", "provider", "host", "virtual_phases", "sim", "real",
+               "metrics", "tolerances", "within_tolerance"}
+METRICS = ("cold_rate", "p50_s", "p95_s", "cost_per_1k")
+
+
+@pytest.fixture(scope="module")
+def report(tmp_path_factory):
+    # isolate the calibration cache: the replay measures live into it
+    cal_path = str(tmp_path_factory.mktemp("cal") / "calibration.json")
+    mp = pytest.MonkeyPatch()
+    mp.setenv("REPRO_CALIBRATION", cal_path)
+    try:
+        yield replay("gpu_serverless", scale=0.02)
+    finally:
+        mp.undo()
+
+
+def test_report_schema_pinned(report):
+    assert set(report) == REPORT_KEYS
+    assert report["schema_version"] == 1
+    assert report["model"] == "deepseek-7b"
+    assert report["provider"] == "modal_gpu"
+    assert report["host"] == calibration.host_fingerprint()
+    assert set(report["metrics"]) == set(METRICS)
+    for m in report["metrics"].values():
+        assert set(m) == {"sim", "real", "abs_err", "rel_err", "within"}
+    vp = report["virtual_phases"]
+    assert vp["provision_s"] == 6.5 and vp["network_overhead_s"] == 0.09
+
+
+def test_error_metrics_finite_within_tolerance(report):
+    assert report["n_requests"] > 0
+    for name, m in report["metrics"].items():
+        for k in ("sim", "real", "abs_err", "rel_err"):
+            assert math.isfinite(m[k]), f"{name}.{k} not finite"
+        assert m["abs_err"] >= 0 and m["rel_err"] >= 0
+    # the loose documented CPU tolerances must hold end to end
+    assert report["tolerances"] == TOLERANCES
+    assert report["within_tolerance"] is True
+    # same trace, mirrored keep-alive semantics: cold starts agree closely
+    assert report["metrics"]["cold_rate"]["abs_err"] <= 0.25
+
+
+def test_replay_rejects_unsupported_stacks():
+    with pytest.raises(ValueError, match="cannot faithfully execute"):
+        replay("gpu_serverless", stack_name="batching", scale=0.02)
+    with pytest.raises(ValueError, match="single-function"):
+        replay("multi_function", scale=0.02)
+    with pytest.raises(ValueError, match="paper CNN"):
+        replay("sparse", scale=0.02)
+
+
+def test_unsupported_stack_check_is_cheap():
+    """_check_replayable fires before any measurement or deploy."""
+    from benchmarks.replay_real import _check_replayable
+    from repro.core import scenarios
+    sc = scenarios.get("gpu_serverless")
+    _check_replayable(sc, sc.tune(POLICY_STACKS["adaptive"]))
+    with pytest.raises(ValueError):
+        _check_replayable(sc, sc.tune(POLICY_STACKS["snapshot_predictive"]))
