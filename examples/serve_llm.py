@@ -34,16 +34,19 @@ t0 = time.perf_counter()
 for rid in range(10):
     prompt = rng.integers(0, cfg.vocab_size, size=16).tolist()
     batcher.submit(PendingRequest(rid=rid, tokens=prompt,
-                                  arrival_s=time.perf_counter() - t0))
+                                  arrival_s=time.perf_counter() - t0,
+                                  n_new=8))
 
-served = {}
+served, outs = {}, {}
 while batcher.queue:
     now = time.perf_counter() - t0
     batch = batcher.form_batch(now, force=True)  # drain: all requests are in
-    res = eng.generate(jnp.asarray(batch.tokens), n_new=8)
+    res = eng.generate(jnp.asarray(batch.tokens), batch.n_new)
     done = time.perf_counter() - t0
-    for rid in batch.rids:
+    for i, rid in enumerate(batch.rids):
         served[rid] = done
+        # decode ran to the batch max; settle each rid at its own budget
+        outs[rid] = np.asarray(res.tokens[i, :batch.n_new_each[i]])
     print(f"  batch of {len(batch.rids)}: prefill {res.prefill_s*1e3:.1f}ms, "
           f"decode {res.decode_s*1e3:.1f}ms ({res.tokens_per_s:.0f} tok/s)")
 print(f"served {len(served)} requests, max latency "

@@ -43,10 +43,19 @@ def train_loss(params, batch, cfg: ModelConfig, **kw):
     return module_for(cfg).train_loss(params, batch, cfg, **kw)
 
 
-def prefill(params, inputs, cfg: ModelConfig, cache_len: int | None = None):
+def prefill(params, inputs, cfg: ModelConfig, cache_len: int | None = None,
+            last_pos=None):
+    """``last_pos`` (scalar or (B,) int32) selects which position's logits
+    to return — the bucketed-prefill hook (right-padded prompts read their
+    real last token, not the pad tail).  Only causal-attention families
+    support it; MoE routing and recurrent state are length-sensitive, so
+    their callers keep exact-length prompts."""
     mod = module_for(cfg)
     if cfg.family in ("audio", "vlm"):
         return mod.prefill(params, inputs, cfg, cache_len)
+    if last_pos is not None:
+        return mod.prefill(params, inputs["tokens"], cfg, cache_len,
+                           last_pos=last_pos)
     return mod.prefill(params, inputs["tokens"], cfg, cache_len)
 
 

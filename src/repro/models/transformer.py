@@ -135,8 +135,15 @@ def cache_spec(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> dict:
 
 
 def prefill(params, tokens, cfg: ModelConfig, cache_len: int | None = None,
-            *, input_embeds=None):
-    """Returns (last_logits (B,V), cache dict padded to cache_len)."""
+            *, input_embeds=None, last_pos=None):
+    """Returns (last_logits (B,V), cache dict padded to cache_len).
+
+    ``last_pos`` selects which position's logits count as "last": a scalar
+    or (B,) int32 of per-row indices.  Bucketed serving right-pads prompts
+    to a shared length, so the real last token sits at ``length - 1``, not
+    at ``-1`` — causal masking keeps the logits there identical to an
+    exact-length prefill (pad tokens only influence positions after
+    themselves, which decode overwrites before they are ever attended)."""
     logits, _aux, (ks, vs) = forward(params, tokens, cfg, return_cache=True,
                                      input_embeds=input_embeds)
     s = ks.shape[2]
@@ -144,7 +151,15 @@ def prefill(params, tokens, cfg: ModelConfig, cache_len: int | None = None,
     if cache_len > s:
         pad = [(0, 0), (0, 0), (0, cache_len - s), (0, 0), (0, 0)]
         ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
-    return logits[:, -1], {"k": ks, "v": vs}
+    if last_pos is None:
+        last = logits[:, -1]
+    else:
+        last_pos = jnp.asarray(last_pos, jnp.int32)
+        if last_pos.ndim == 0:
+            last = logits[:, last_pos]
+        else:
+            last = logits[jnp.arange(logits.shape[0]), last_pos]
+    return last, {"k": ks, "v": vs}
 
 
 def decode_step(params, cache: dict, token: jnp.ndarray, pos: jnp.ndarray,

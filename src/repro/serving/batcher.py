@@ -28,8 +28,12 @@ class Batch:
     rids: list
     tokens: np.ndarray    # (B, S) right-padded
     lengths: np.ndarray   # (B,)
-    n_new: int
+    n_new: int            # batch-wide decode budget (max over requests)
     formed_at_s: float
+    # per-request budgets: the engine decodes ``n_new`` steps for the whole
+    # batch, then settlement trims each completion to its own request's ask
+    # instead of billing every rid for the batch max
+    n_new_each: Optional[list] = None
 
 
 class Batcher:
@@ -74,4 +78,5 @@ class Batcher:
         for i, r in enumerate(take):
             toks[i, : len(r.tokens)] = r.tokens
         return Batch(rids=[r.rid for r in take], tokens=toks, lengths=lens,
-                     n_new=max(r.n_new for r in take), formed_at_s=now_s)
+                     n_new=max(r.n_new for r in take), formed_at_s=now_s,
+                     n_new_each=[r.n_new for r in take])

@@ -7,6 +7,20 @@ slot is immediately refilled from the queue — no waiting for the whole batch,
 which is what turns the paper's per-request serving economics into sustained
 throughput (DESIGN.md §4, "batching is first-class").
 
+Decode fast path (DESIGN.md §4): compute state (KV cache, last tokens,
+per-row positions) lives on device and is threaded through a donated, jitted
+fused step — ``run()`` scans ``min(remaining)`` steps per dispatch
+(decomposed into power-of-two chunks so the scan compiles O(log) times, not
+per distinct length) and fetches the whole token block in ONE device→host
+transfer.  Control state (``active``/``remaining``/``rid``) is host-side
+bookkeeping that evolves deterministically — scheduling never syncs the
+device.  Admission runs ONE batched prefill per round (prompts right-padded
+to a power-of-two bucket on dense configs, so the prefill jit compiles per
+bucket instead of per unique prompt length) and ONE donated slot-scatter —
+not a full-cache copy per request.  MoE configs keep exact-length
+per-request prefills (expert-capacity routing sees pad tokens, which would
+change real tokens' routing) but still share the per-round scatter.
+
 Transformer-family models (dense / moe / vlm).  Greedy decoding.
 ``repro.core.calibration`` drives this server to measure per-model
 batch-efficiency curves (fused-step wall time at a pinned slot count).
@@ -23,6 +37,19 @@ import numpy as np
 
 from repro.models import api
 from repro.models.common import ModelConfig
+from repro.serving.engine import bucket_len
+
+# fused-step scan chunk cap: step counts decompose into powers of two up to
+# this, so the scan jit compiles at most log2(64)+1 variants ever
+MAX_CHUNK = 64
+
+
+def _chunks(k: int):
+    """Decompose k into power-of-two pieces (largest first, capped)."""
+    while k > 0:
+        c = min(MAX_CHUNK, 1 << (k.bit_length() - 1))
+        yield c
+        k -= c
 
 
 @dataclasses.dataclass
@@ -49,20 +76,50 @@ class ContinuousServer:
         self.max_seq = max_seq
         self.params = api.init_params(jax.random.PRNGKey(seed), cfg)
         self.cache = api.init_cache(cfg, slots, max_seq)
+        # host control plane: deterministic bookkeeping, never syncs device
         self.pos = np.zeros(slots, np.int32)
         self.active = np.zeros(slots, bool)
         self.rid = [-1] * slots
         self.remaining = np.zeros(slots, np.int32)
         self.last_tok = np.zeros(slots, np.int32)
+        # device compute state: threaded through the donated fused step
+        self._tok_dev = jnp.zeros((slots,), jnp.int32)
+        self._pos_dev = jnp.zeros((slots,), jnp.int32)
         self.out: dict[int, list] = {}
         self.queue: deque[Request] = deque()
         self._done: list[Completion] = []
         self._steps = 0
         self._prefill = jax.jit(
-            lambda p, t, n: api.prefill(p, {"tokens": t}, cfg, cache_len=n),
+            lambda p, t, last_pos, n: api.prefill(p, {"tokens": t}, cfg,
+                                                  cache_len=n,
+                                                  last_pos=last_pos),
             static_argnames=("n",))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: api.decode_step(p, c, t, pos, cfg))
+        # one scatter per admission round; the pool-sized cache is donated
+        # so XLA writes the admitted rows in place
+        self._scatter = jax.jit(
+            lambda cache, rows, idx: jax.tree_util.tree_map(
+                lambda full, new: full.at[:, idx].set(
+                    new.astype(full.dtype)), cache, rows),
+            donate_argnums=(0,))
+        self._fused = jax.jit(self._fused_impl, donate_argnums=(1, 2, 3),
+                              static_argnames=("n_steps",))
+
+    # ------------------------------------------------------------------
+    def _fused_impl(self, params, cache, tok, pos, active, *, n_steps: int):
+        """n_steps fused decode steps under one jit.  Rows outside
+        ``active`` keep their carry frozen (same stale inputs the per-step
+        loop fed them), so the token stream is bit-identical to stepping."""
+        def body(carry, _):
+            cache, tok, pos = carry
+            logits, cache = api.decode_step(params, cache, tok, pos,
+                                            self.cfg)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(active, nxt, tok)
+            pos = jnp.where(active, pos + 1, pos)
+            return (cache, tok, pos), nxt
+        (cache, tok, pos), toks = jax.lax.scan(
+            body, (cache, tok, pos), None, length=n_steps)
+        return cache, tok, pos, toks          # toks: (n_steps, slots)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -84,18 +141,58 @@ class ContinuousServer:
         and tests use it to assert the slot-refill invariants."""
         self._admit()
 
+    # ------------------------------------------------------------------
+    def _prefill_bucketed(self, reqs):
+        """ONE batched prefill for the whole admission round: batch padded
+        to the slot count, prompts right-padded to a shared power-of-two
+        bucket — so the prefill jit compiles once per bucket."""
+        m = len(reqs)
+        bucket = min(bucket_len(max(len(r.prompt) for r in reqs)),
+                     self.max_seq)
+        toks = np.zeros((self.slots, bucket), np.int32)
+        last = np.zeros((self.slots,), np.int32)
+        for j, r in enumerate(reqs):
+            toks[j, :len(r.prompt)] = r.prompt
+            last[j] = len(r.prompt) - 1
+        logits, pc = self._prefill(self.params, jnp.asarray(toks),
+                                   jnp.asarray(last), self.max_seq)
+        rows = jax.tree_util.tree_map(lambda x: x[:, :m], pc)
+        return logits[:m], rows
+
+    def _prefill_exact(self, reqs):
+        """Per-request exact-length prefills (MoE/VLM: pad tokens shift
+        expert routing, so bucketing would change real tokens).  Caches
+        still merge into one per-round scatter."""
+        logits, rows = [], []
+        for r in reqs:
+            lg, pc = self._prefill(
+                self.params, jnp.asarray(r.prompt, jnp.int32)[None],
+                None, self.max_seq)
+            logits.append(lg)
+            rows.append(pc)
+        if len(rows) == 1:
+            return logits[0], rows[0]
+        return (jnp.concatenate(logits, axis=0),
+                jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs, axis=1), *rows))
+
     def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] or not self.queue:
-                continue
-            req = self.queue.popleft()
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, pc = self._prefill(self.params, prompt, self.max_seq)
-            # copy the single-sequence cache into slot s
-            self.cache = jax.tree_util.tree_map(
-                lambda full, one: full.at[:, s].set(one[:, 0]),
-                self.cache, pc)
-            tok = int(jnp.argmax(logits[0]))
+        free = [s for s in range(self.slots) if not self.active[s]]
+        m = min(len(free), len(self.queue))
+        if m == 0:
+            return
+        reqs = [self.queue.popleft() for _ in range(m)]
+        idx = free[:m]
+        if self.cfg.family == "dense":
+            logits, rows = self._prefill_bucketed(reqs)
+        else:
+            logits, rows = self._prefill_exact(reqs)
+        # one donated slot-scatter per round — not a pool copy per request
+        self.cache = self._scatter(self.cache, rows,
+                                   jnp.asarray(idx, jnp.int32))
+        first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for j, (s, req) in enumerate(zip(idx, reqs)):
+            tok = int(first[j])
             self.active[s] = True
             self.rid[s] = req.rid
             self.pos[s] = len(req.prompt)
@@ -104,6 +201,9 @@ class ContinuousServer:
             self.out[req.rid] = [tok]
             if req.n_new == 1:
                 self._finish(s)
+        # resync the device compute state from the host mirrors (H2D only)
+        self._tok_dev = jnp.asarray(self.last_tok, jnp.int32)
+        self._pos_dev = jnp.asarray(self.pos, jnp.int32)
 
     def _finish(self, s: int):
         rid = self.rid[s]
@@ -112,33 +212,59 @@ class ContinuousServer:
         self.rid[s] = -1
 
     # ------------------------------------------------------------------
+    def _run_chunk(self, n_steps: int) -> np.ndarray:
+        """n_steps fused steps on device; returns the (n_steps, slots)
+        token block — the single device→host transfer."""
+        self.cache, self._tok_dev, self._pos_dev, toks = self._fused(
+            self.params, self.cache, self._tok_dev, self._pos_dev,
+            jnp.asarray(self.active), n_steps=n_steps)
+        self._steps += n_steps
+        return np.asarray(toks)
+
+    def _settle(self, toks: np.ndarray):
+        """Apply a token block to the host control plane; finish slots
+        whose budget (or cache) ran out."""
+        for row in toks:
+            for s in range(self.slots):
+                if not self.active[s]:
+                    continue
+                t = int(row[s])
+                self.out[self.rid[s]].append(t)
+                self.pos[s] += 1
+                self.last_tok[s] = t
+                self.remaining[s] -= 1
+                if self.remaining[s] <= 0 or self.pos[s] >= self.max_seq - 1:
+                    self._finish(s)
+
     def step(self):
         """One fused decode step across all active slots."""
-        toks = jnp.asarray(self.last_tok, jnp.int32)
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self._steps += 1
-        for s in range(self.slots):
-            if not self.active[s]:
-                continue
-            self.out[self.rid[s]].append(int(nxt[s]))
-            self.pos[s] += 1
-            self.last_tok[s] = nxt[s]
-            self.remaining[s] -= 1
-            if self.remaining[s] <= 0 or self.pos[s] >= self.max_seq - 1:
-                self._finish(s)
+        self._settle(self._run_chunk(1))
 
     # ------------------------------------------------------------------
     def run(self) -> list:
         """Drain the queue; returns Completions in finish order.
 
-        Completions are recorded at ``_finish`` time (O(1) per sequence)
-        rather than rescanning every served request each step.
-        """
+        Fast path: between admissions, every active slot survives exactly
+        ``min(steps-to-finish)`` more steps — so that many are scanned in
+        fused chunks with one transfer each, and settlement is pure host
+        arithmetic.  Admission points, step counts, and the token streams
+        are bit-identical to the per-step loop (pinned in tests)."""
         while self.queue or self.active.any():
             self._admit()
-            if self.active.any():
-                self.step()
+            if not self.active.any():
+                continue
+            k = min(min(int(self.remaining[s]),
+                        self.max_seq - 1 - int(self.pos[s]))
+                    for s in range(self.slots) if self.active[s])
+            for c in _chunks(max(1, k)):
+                self._settle(self._run_chunk(c))
         done, self._done = self._done, []
         return done
+
+    # ------------------------------------------------------------------
+    def compile_stats(self) -> dict:
+        """Live jit-cache sizes — the recompile counters the serving bench
+        and the bucketing tests assert on."""
+        return {"prefill": self._prefill._cache_size(),
+                "fused_step": self._fused._cache_size(),
+                "scatter": self._scatter._cache_size()}

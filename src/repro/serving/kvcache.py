@@ -15,12 +15,42 @@ kernels consume.  This is the substrate for continuous batching.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import ModelConfig
+
+
+# ----------------------------------------------------------------------
+# jitted pool data movement (module-level so every PagedPool shares one
+# compile cache).  The pool argument is donated: repeated writes update
+# the device pool in place instead of double-buffering the whole tensor,
+# and going through jit means repeated calls dispatch a cached executable
+# instead of re-tracing an op chain per call.
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, donate_argnums=(0,))
+def _pool_scatter_blocks(pool, idx, chunks):
+    """pool (L,NB,block,K,hd); idx (nb,) block ids; chunks (L,nb,block,K,hd).
+    One indexed scatter over the sequence's whole block table."""
+    return pool.at[:, idx].set(chunks.astype(pool.dtype))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _pool_write_token(pool, b, off, val):
+    """Write one token's (L,K,hd) into block ``b`` at offset ``off``."""
+    return pool.at[:, b, off].set(val.astype(pool.dtype))
+
+
+@jax.jit
+def _pool_gather(pool, idx):
+    """Dense (L, nb*block, K, hd) view of the blocks in ``idx`` order."""
+    g = pool[:, idx]
+    l, nb, blk, kh, hd = g.shape
+    return g.reshape(l, nb * blk, kh, hd)
 
 
 # ----------------------------------------------------------------------
@@ -99,42 +129,40 @@ class PagedPool:
 
     # ----- device data movement ---------------------------------------
     def write_prefill(self, seq_id: int, ks, vs):
-        """ks/vs: (L, S, K, hd) for one sequence; scatters into the pool."""
-        s = ks.shape[1]
-        blocks = self.tables[seq_id]
-        for j, b in enumerate(blocks):
-            lo = j * self.block
-            hi = min(lo + self.block, s)
-            if lo >= s:
-                break
-            chunk_k = ks[:, lo:hi]
-            chunk_v = vs[:, lo:hi]
-            pad = self.block - (hi - lo)
-            if pad:
-                chunk_k = jnp.pad(chunk_k, [(0, 0), (0, pad), (0, 0), (0, 0)])
-                chunk_v = jnp.pad(chunk_v, [(0, 0), (0, pad), (0, 0), (0, 0)])
-            self.k = self.k.at[:, b].set(chunk_k)
-            self.v = self.v.at[:, b].set(chunk_v)
+        """ks/vs: (L, S, K, hd) for one sequence; ONE indexed scatter over
+        the sequence's block table (the old per-block loop copied the
+        entire pool once per block)."""
+        l, s = ks.shape[0], ks.shape[1]
+        nb = min(-(-s // self.block), len(self.tables[seq_id]))
+        pad = nb * self.block - s
+        if pad < 0:     # more tokens than allocated blocks: truncate,
+            ks = ks[:, :nb * self.block]    # as the per-block loop did
+            vs = vs[:, :nb * self.block]
+        elif pad:
+            padc = [(0, 0), (0, pad), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, padc), jnp.pad(vs, padc)
+        shape = (l, nb, self.block) + ks.shape[2:]
+        idx = jnp.asarray(self.tables[seq_id][:nb], jnp.int32)
+        self.k = _pool_scatter_blocks(self.k, idx, ks.reshape(shape))
+        self.v = _pool_scatter_blocks(self.v, idx, vs.reshape(shape))
 
     def write_token(self, seq_id: int, k1, v1):
         """k1/v1: (L, K, hd) — append one token (extend() first)."""
         pos = self.lengths[seq_id] - 1
-        b = self.tables[seq_id][pos // self.block]
-        off = pos % self.block
-        self.k = self.k.at[:, b, off].set(k1)
-        self.v = self.v.at[:, b, off].set(v1)
+        b = jnp.int32(self.tables[seq_id][pos // self.block])
+        off = jnp.int32(pos % self.block)
+        self.k = _pool_write_token(self.k, b, off, jnp.asarray(k1))
+        self.v = _pool_write_token(self.v, b, off, jnp.asarray(v1))
 
     def gather(self, seq_id: int, pad_to: int | None = None):
         """Dense (L, S_padded, K, hd) view of one sequence + valid mask."""
         blocks = jnp.asarray(self.tables[seq_id], jnp.int32)
-        ks = self.k[:, blocks]            # (L, nb, block, K, hd)
-        vs = self.v[:, blocks]
-        l, nb, blk, kh, hd = ks.shape
-        ks = ks.reshape(l, nb * blk, kh, hd)
-        vs = vs.reshape(l, nb * blk, kh, hd)
+        ks = _pool_gather(self.k, blocks)
+        vs = _pool_gather(self.v, blocks)
+        nbs = ks.shape[1]
         length = self.lengths[seq_id]
-        if pad_to and pad_to > nb * blk:
-            padc = [(0, 0), (0, pad_to - nb * blk), (0, 0), (0, 0)]
+        if pad_to and pad_to > nbs:
+            padc = [(0, 0), (0, pad_to - nbs), (0, 0), (0, 0)]
             ks, vs = jnp.pad(ks, padc), jnp.pad(vs, padc)
         mask = jnp.arange(ks.shape[1]) < length
         return ks, vs, mask

@@ -1,0 +1,251 @@
+"""Decode fast path: fused-scan/bucketing/scatter parity + recompile pins.
+
+The golden token streams below were captured on the pre-fast-path per-token
+loop implementations (exact-length prefill, per-step server loop, per-block
+pool writes).  Every fast path must reproduce them bit-for-bit — these pins
+are the contract that the perf work in DESIGN.md §4 changed *nothing* about
+what the models emit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.models import api
+from repro.serving.continuous import ContinuousServer, Request, _chunks
+from repro.serving.engine import InferenceEngine, bucket_len
+from repro.serving.kvcache import PagedPool
+from repro.serving.sampler import sample_token
+
+CFG = ARCHS["deepseek-7b"].smoke
+MOE = ARCHS["granite-moe-3b-a800m"].smoke
+
+# captured on the pre-PR per-token loop (engine seed=0, max_cache=48,
+# prompt [3,1,4,1,5,9,2,6], n_new=6)
+ENGINE_GOLDEN = [468, 252, 367, 168, 503, 367]
+ENGINE_TEMP_GOLDEN = [259, 477, 193, 213, 206, 34]       # temperature=0.8 seed=7
+
+# captured on the pre-PR per-step ContinuousServer (setup mirrors
+# test_continuous._requests: 7 reqs, 3 slots, max_seq=48, n_new=5)
+CONT_GOLDEN = {0: [171, 285, 491, 55, 4], 1: [121, 256, 206, 316, 167],
+               2: [164, 145, 229, 94, 105], 3: [409, 88, 88, 88, 88],
+               4: [343, 343, 343, 343, 343], 5: [233, 102, 102, 102, 397],
+               6: [118, 447, 200, 296, 296]}
+CONT_STEPS = 12
+CONT_ORDER = [0, 1, 2, 3, 4, 5, 6]
+CONT_IN_FLIGHT = [4, 4, 4, 8, 8, 8, 12]
+
+# MoE stays on exact-length prefill (routing is length-sensitive) but runs
+# the same fused decode; captured pre-PR (4 reqs, 2 slots, max_seq=24)
+MOE_GOLDEN = {0: [116, 8, 300, 80], 1: [140, 417, 365, 284],
+              2: [227, 51, 226, 106], 3: [289, 407, 225, 390]}
+
+
+def _cont_requests(n, seed=0, n_new=5):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab_size,
+                                        size=int(rng.integers(4, 12))).tolist(),
+                    n_new=n_new)
+            for i in range(n)]
+
+
+# ----------------------------------------------------------------------
+# engine: fused scan
+# ----------------------------------------------------------------------
+
+def test_engine_scan_matches_pre_fast_path_golden():
+    eng = InferenceEngine(CFG, seed=0, max_cache=48)
+    prompt = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6]], jnp.int32)
+    res = eng.generate(prompt, 6)
+    assert [int(t) for t in np.asarray(res.tokens[0])] == ENGINE_GOLDEN
+    res_t = eng.generate(prompt, 6, temperature=0.8, seed=7)
+    assert [int(t) for t in np.asarray(res_t.tokens[0])] == ENGINE_TEMP_GOLDEN
+
+
+def test_engine_scan_matches_stream_loop():
+    """The fused scan and the per-token stream loop must emit identical
+    tokens — greedy and sampled (the RNG key sequence is replicated)."""
+    eng = InferenceEngine(CFG, seed=0, max_cache=64)
+    prompt = jnp.asarray([[7, 7, 2, 9, 1], [5, 0, 3, 3, 8]], jnp.int32)
+    for temp, seed in ((0.0, 0), (0.9, 11)):
+        fused = eng.generate(prompt, 9, temperature=temp, seed=seed)
+        stream = eng.generate_stream(prompt, 9, temperature=temp, seed=seed)
+        np.testing.assert_array_equal(np.asarray(fused.tokens),
+                                      np.asarray(stream.tokens))
+    assert stream.token_walls is not None and len(stream.token_walls) == 8
+    assert fused.token_walls is None
+
+
+def test_engine_bucketing_hits_compile_cache():
+    """Prompt lengths 5/6/7 share the len-8 bucket: one prefill compile,
+    and a shared n_new means one scan compile."""
+    eng = InferenceEngine(CFG, seed=0, max_cache=32)
+    for s in (5, 6, 7):
+        eng.generate(jnp.asarray([[1] * s], jnp.int32), 4)
+    stats = eng.compile_stats()
+    assert stats["prefill"] == 1
+    assert stats["decode_scan"] == 1
+    # a new bucket costs exactly one more prefill compile
+    eng.generate(jnp.asarray([[1] * 12], jnp.int32), 4)
+    assert eng.compile_stats()["prefill"] == 2
+
+
+def test_bucketed_prefill_last_logits_bit_exact():
+    """Right-padding a dense prompt to its bucket and reading logits at
+    ``len-1`` is bit-identical to the exact-length prefill (causal masking:
+    pad tokens only influence positions after themselves)."""
+    params = api.init_params(jax.random.PRNGKey(0), CFG)
+    prompt = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6, 5, 3]], jnp.int32)  # s=10
+    s = prompt.shape[1]
+    exact, _ = api.prefill(params, {"tokens": prompt}, CFG, cache_len=32)
+    padded = jnp.pad(prompt, [(0, 0), (0, bucket_len(s) - s)])
+    bucketed, _ = api.prefill(params, {"tokens": padded}, CFG, cache_len=32,
+                              last_pos=jnp.int32(s - 1))
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(bucketed))
+
+
+# ----------------------------------------------------------------------
+# continuous server: fused chunks + batched admission
+# ----------------------------------------------------------------------
+
+def test_continuous_matches_pre_fast_path_golden():
+    srv = ContinuousServer(CFG, slots=3, max_seq=48, seed=0)
+    for r in _cont_requests(7):
+        srv.submit(r)
+    done = srv.run()
+    assert {c.rid: c.tokens for c in done} == CONT_GOLDEN
+    assert srv.steps == CONT_STEPS
+    assert [c.rid for c in done] == CONT_ORDER
+    assert [c.steps_in_flight for c in done] == CONT_IN_FLIGHT
+
+
+def test_continuous_moe_matches_golden():
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, MOE.vocab_size,
+                                        size=int(rng.integers(3, 8))).tolist(),
+                    n_new=4)
+            for i in range(4)]
+    srv = ContinuousServer(MOE, slots=2, max_seq=24, seed=0)
+    for r in reqs:
+        srv.submit(r)
+    assert {c.rid: c.tokens for c in srv.run()} == MOE_GOLDEN
+
+
+def test_continuous_fused_matches_per_step():
+    """run() (fused multi-step chunks) and a manual step() loop must emit
+    identical streams — the chunk length never crosses a finish/admit."""
+    reqs = _cont_requests(6, seed=42, n_new=7)
+    fast = ContinuousServer(CFG, slots=3, max_seq=48, seed=0)
+    slow = ContinuousServer(CFG, slots=3, max_seq=48, seed=0)
+    for r in reqs:
+        fast.submit(r)
+        slow.submit(Request(r.rid, list(r.prompt), r.n_new))
+    fast_done = {c.rid: c.tokens for c in fast.run()}
+    while slow.queue or slow.active.any():
+        slow.prefill_pending()
+        if slow.active.any():
+            slow.step()
+    slow_done = {c.rid: c.tokens for c in slow._done}
+    assert fast_done == slow_done
+    assert fast.steps == slow.steps
+
+
+def test_continuous_admission_compile_reuse():
+    """Mixed prompt lengths within one bucket reuse the prefill compile;
+    fused chunks compile once per power-of-two length."""
+    srv = ContinuousServer(CFG, slots=4, max_seq=64, seed=0)
+    for i in range(4):
+        srv.submit(Request(rid=i, prompt=[1 + i] * (5 + i), n_new=4))
+    srv.run()
+    first = srv.compile_stats()
+    assert first["prefill"] == 1               # lengths 5-8 share bucket 8
+    for i in range(4):
+        srv.submit(Request(rid=10 + i, prompt=[2 + i] * (5 + i), n_new=4))
+    srv.run()
+    assert srv.compile_stats() == first        # second round: zero compiles
+
+
+def test_chunk_decomposition():
+    assert list(_chunks(1)) == [1]
+    assert list(_chunks(7)) == [4, 2, 1]
+    assert list(_chunks(64)) == [64]
+    assert list(_chunks(200)) == [64, 64, 64, 8]
+    assert sum(_chunks(1337)) == 1337
+
+
+# ----------------------------------------------------------------------
+# paged pool: scatter vs reference loop
+# ----------------------------------------------------------------------
+
+def test_pool_scatter_matches_reference_loop():
+    cfg = CFG
+    l, kh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    pool = PagedPool(cfg, n_blocks=8, block=4, dtype="float32")
+    s = 10
+    ks = jax.random.normal(jax.random.PRNGKey(0), (l, s, kh, hd))
+    vs = jax.random.normal(jax.random.PRNGKey(1), (l, s, kh, hd))
+    pool.allocate(7, s)
+    pool.write_prefill(7, ks, vs)
+
+    # reference: the old per-block loop semantics
+    ref = jnp.zeros_like(pool.k)
+    for j, b in enumerate(pool.tables[7]):
+        lo, hi = j * pool.block, min((j + 1) * pool.block, s)
+        if lo >= s:
+            break
+        chunk = ks[:, lo:hi]
+        if hi - lo < pool.block:
+            chunk = jnp.pad(chunk,
+                            [(0, 0), (0, pool.block - (hi - lo)),
+                             (0, 0), (0, 0)])
+        ref = ref.at[:, b].set(chunk)
+    np.testing.assert_array_equal(np.asarray(pool.k), np.asarray(ref))
+
+    gk, gv, mask = pool.gather(7)
+    assert int(mask.sum()) == s
+    np.testing.assert_array_equal(np.asarray(gk[:, :s]), np.asarray(ks))
+    np.testing.assert_array_equal(np.asarray(gv[:, :s]), np.asarray(vs))
+
+    pool.extend(7)
+    tok = jax.random.normal(jax.random.PRNGKey(2), (l, kh, hd))
+    pool.write_token(7, tok, tok)
+    gk, _, mask = pool.gather(7)
+    assert int(mask.sum()) == s + 1
+    np.testing.assert_array_equal(np.asarray(gk[:, s]), np.asarray(tok))
+
+
+# ----------------------------------------------------------------------
+# satellites: sampler top-k, batcher per-request budgets
+# ----------------------------------------------------------------------
+
+def test_top_k_matches_full_sort_reference():
+    logits = jax.random.normal(jax.random.PRNGKey(5), (4, 257))
+    rng = jax.random.PRNGKey(9)
+    for k in (1, 5, 64):
+        got = sample_token(logits, 0.7, rng, top_k=k)
+        # reference: the old full-vocab sort masking
+        l = logits.astype(jnp.float32) / 0.7
+        kth = jnp.sort(l, axis=-1)[:, -k][:, None]
+        ref = jax.random.categorical(
+            rng, jnp.where(l < kth, -jnp.inf, l), axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_batcher_per_request_budgets():
+    from repro.serving.batcher import Batcher, PendingRequest
+    b = Batcher(max_batch=4, max_wait_s=0.0)
+    asks = [2, 16, 5, 9]
+    for i, n in enumerate(asks):
+        b.submit(PendingRequest(rid=i, tokens=[1] * (3 + i), arrival_s=0.0,
+                                n_new=n))
+    batch = b.form_batch(1.0)
+    assert batch.n_new == 16               # decode budget: the batch max
+    assert batch.n_new_each == asks        # settlement trims to these
+    eng = InferenceEngine(CFG, seed=0, max_cache=32)
+    res = eng.generate(jnp.asarray(batch.tokens), batch.n_new)
+    outs = {rid: np.asarray(res.tokens[i, :batch.n_new_each[i]])
+            for i, rid in enumerate(batch.rids)}
+    for i, n in enumerate(asks):
+        assert outs[i].shape == (n,)       # nobody billed for the batch max
