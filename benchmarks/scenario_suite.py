@@ -2,7 +2,9 @@
 
 For every scenario in ``repro.core.scenarios`` this runner sweeps the full
 (placement x keepalive x scaling x coldstart x concurrency x batching)
-cross-product on the scenario's trace and fleet, grades each combo against
+cross-product on the scenario's trace and fleet (scenarios that pin their
+own ``sweep_axes`` — e.g. ``sharded_110b``'s sharding fan-out ladder —
+sweep that grid instead), grades each combo against
 the scenario's SLA, and emits a per-scenario markdown + CSV report with
 cold-start rate, p50/p95/p99 latency, SLA verdicts, and cost per 1k
 invocations (mitigation spend — snapshot storage, bare-pool idle — folded
@@ -55,9 +57,9 @@ AXES = {
 }
 
 CSV_FIELDS = ("scenario", "placement", "keepalive", "scaling", "coldstart",
-              "concurrency", "batching", "n", "cold_rate", "p50_s", "p95_s",
-              "p99_s", "cost_per_1k", "mitigation_per_1k", "sla", "sla_ok",
-              "evictions", "prewarms")
+              "concurrency", "batching", "sharding", "n", "cold_rate",
+              "p50_s", "p95_s", "p99_s", "cost_per_1k", "mitigation_per_1k",
+              "sla", "sla_ok", "evictions", "prewarms")
 
 
 def run_combo(specs, trace, stack: PolicyStack, *, seed=0, sla=None,
@@ -77,8 +79,12 @@ def run_combo(specs, trace, stack: PolicyStack, *, seed=0, sla=None,
 
 def run_scenario(scenario: Scenario, *, scale: float = 1.0,
                  platform: ServerlessPlatform | None = None,
-                 axes: dict = AXES, jobs: int = 1) -> dict:
+                 axes: dict | None = None, jobs: int = 1) -> dict:
     """Sweep the policy cross-product on one scenario.
+
+    ``axes`` defaults to the scenario's own ``sweep_axes`` when it pins
+    one (the sharded scenario sweeps a sharding fan-out ladder instead of
+    the classic six-axis grid), else the suite-wide ``AXES``.
 
     Returns ``{"scenario", "n_requests", "rows": {PolicyStack: row},
     "verdict": {...}}`` where the verdict compares the scenario's
@@ -98,6 +104,8 @@ def run_scenario(scenario: Scenario, *, scale: float = 1.0,
     """
     if jobs > 1:
         _check_parallelizable(scenario, platform)
+    if axes is None:
+        axes = scenario.sweep_axes or AXES
     platform = platform or ServerlessPlatform(seed=0,
                                               use_fallback_calibration=True)
     specs = scenario.deploy(platform)
@@ -159,8 +167,8 @@ def _grade(scenario: Scenario, fleet_names: list, n_requests: int,
 
 # ------------------------------------------------------------------ reporting
 def _fmt_combo(stack: PolicyStack) -> tuple:
-    p, k, s, cs, c, b = stack.axes_key()
-    return p, k, s, cs, str(c), ("y" if b else "n")
+    p, k, s, cs, c, b, sh = stack.axes_key()
+    return p, k, s, cs, str(c), ("y" if b else "n"), sh
 
 
 def _sorted_rows(rows: dict) -> list:
@@ -180,16 +188,18 @@ def scenario_markdown(result: dict) -> str:
              f"- trace: {result['n_requests']} requests "
              f"(scale {result['scale']:g}), SLA `{result['sla']}`", "",
              "| placement | keepalive | scaling | coldstart | conc | batch "
-             "| cold | p50 s | p95 s | p99 s | $/1k | mit$/1k | SLA "
+             "| shard | cold | p50 s | p95 s | p99 s | $/1k | mit$/1k | SLA "
              "| evict | prewarm |",
-             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---"
+             "|---|"]
     for key in _sorted_rows(result["rows"]):
         r = result["rows"][key]
-        p, k, s, cs, c, b = _fmt_combo(key)
+        p, k, s, cs, c, b, sh = _fmt_combo(key)
         sla_cell = ("ok" if r["sla_ok"]
                     else "FAIL " + "/".join(r["sla_violations"]))
         lines.append(
-            f"| {p} | {k} | {s} | {cs} | {c} | {b} | {r['cold_rate']:.2%} "
+            f"| {p} | {k} | {s} | {cs} | {c} | {b} | {sh} "
+            f"| {r['cold_rate']:.2%} "
             f"| {r['p50_s']:.3f} | {r['p95_s']:.3f} | {r['p99_s']:.3f} "
             f"| {r['cost_per_1k']:.4f} | {r['mitigation_per_1k']:.4f} "
             f"| {sla_cell} | {r['evictions']} | {r['prewarms']} |")
@@ -228,11 +238,11 @@ def suite_csv_rows(results: list) -> list:
     for res in results:
         for key in _sorted_rows(res["rows"]):
             r = res["rows"][key]
-            p, k, s, cs, c, b = _fmt_combo(key)
+            p, k, s, cs, c, b, sh = _fmt_combo(key)
             out.append({"scenario": res["scenario"], "placement": p,
                         "keepalive": k, "scaling": s, "coldstart": cs,
                         "concurrency": c,
-                        "batching": b, "n": r["n"],
+                        "batching": b, "sharding": sh, "n": r["n"],
                         "cold_rate": f"{r['cold_rate']:.6f}",
                         "p50_s": f"{r['p50_s']:.6f}",
                         "p95_s": f"{r['p95_s']:.6f}",
@@ -283,14 +293,18 @@ def run_suite(names: list | None = None, *, scale: float | None = None,
         # one pool for the whole suite: scenarios' grids interleave across
         # workers (better load balance than per-scenario pools, one
         # startup cost), then rows split back per scenario positionally.
-        # The parent still deploys + builds each trace (needed for fleet
-        # names / n_requests and as a fail-fast config check): all five
-        # full-scale builds cost ~0.07 s with the vectorized generators —
-        # scenario traces are thousands of requests, not the 1M simloop one
-        stacks = PolicyStack.grid(AXES)
-        work, inputs = [], []
+        # Grids are per-scenario (a pinned ``sweep_axes`` — the sharded
+        # ladder — replaces the six-axis default), so the positional split
+        # tracks each grid's own length.  The parent still deploys +
+        # builds each trace (needed for fleet names / n_requests and as a
+        # fail-fast config check): all the full-scale builds cost ~0.07 s
+        # with the vectorized generators — scenario traces are thousands
+        # of requests, not the 1M simloop one
+        work, inputs, grids = [], [], []
         for sc, eff in picked:
             _check_parallelizable(sc, None)
+            stacks = PolicyStack.grid(sc.sweep_axes or AXES)
+            grids.append(stacks)
             platform = ServerlessPlatform(seed=0,
                                           use_fallback_calibration=True)
             fleet_specs = sc.deploy(platform)
@@ -299,10 +313,11 @@ def run_suite(names: list | None = None, *, scale: float | None = None,
             work += [ExperimentSpec(scenario=sc.name, stack=stack, scale=eff)
                      for stack in stacks]
         flat = run_specs(work, jobs=jobs)
-        results = []
+        results, off = [], 0
         for i, (sc, eff) in enumerate(picked):
-            rows = dict(zip(stacks, flat[i * len(stacks):
-                                         (i + 1) * len(stacks)]))
+            stacks = grids[i]
+            rows = dict(zip(stacks, flat[off:off + len(stacks)]))
+            off += len(stacks)
             fleet_names, n_requests = inputs[i]
             results.append(_grade(sc, fleet_names, n_requests, rows, eff))
     if out_dir:

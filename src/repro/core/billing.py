@@ -75,3 +75,13 @@ def sandbox_idle_cost(idle_seconds: float) -> float:
     if idle_seconds <= 0:
         return 0.0
     return billed_ticks(idle_seconds) * price_per_100ms(BARE_SANDBOX_MB)
+
+
+def transfer_cost(bytes_total: float, usd_per_gb: float) -> float:
+    """Data-transfer dollars for moving ``bytes_total`` through a
+    provider-mediated comms channel (storage PUT/GET or queue messages) —
+    the sharded fan-out path's per-GB surcharge, folded into
+    ``mitigation_cost`` alongside the other platform-side spend."""
+    if bytes_total <= 0:
+        return 0.0
+    return bytes_total / 1e9 * usd_per_gb

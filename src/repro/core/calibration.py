@@ -133,6 +133,17 @@ MODERN_MODELS = {
                      "compile_s": 1.39, "package_mb": 2.31,
                      "tokens_per_s": 1355.0, "batch_curve": []},
     },
+    # the sharded_110b scenario's model: too big for one sandbox at real
+    # scale, so the distributed-inference path fans it out (smoke-scaled
+    # measurements like the rest; peak_mb is the FULL single-sandbox
+    # working set the ShardPlan's memory fractions divide)
+    "qwen1.5-110b": {
+        "peak_mb": 768.0,
+        "fallback": {"kind": "llm", "warm_exec_s": 0.0080, "init_s": 2.48,
+                     "compile_s": 1.18, "package_mb": 3.46,
+                     "tokens_per_s": 1180.0,
+                     "batch_curve": [[1, 1.0], [2, 0.52], [4, 0.27]]},
+    },
 }
 
 # re-exported for the property tests / external callers

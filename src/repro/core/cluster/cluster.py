@@ -72,8 +72,12 @@ _UNSET = object()
 # and PolicyStack.from_kwargs mirror (tests pin the shim equivalence)
 AXIS_DEFAULTS = {"placement": "mru", "keepalive": None, "scaling": None,
                  "coldstart": None, "concurrency": 1, "batching": None,
-                 "max_containers": 0}
+                 "max_containers": 0, "sharding": None}
 _AXIS_DEFAULTS = AXIS_DEFAULTS
+# seed offset for the gang lanes' sandbox-reclaim RNG: an independent
+# stream so sharded runs never perturb the jitter draw order the parity
+# goldens pin (any fixed offset works; a prime keeps it recognizable)
+_RECLAIM_SEED_OFFSET = 104729
 
 
 class ClusterSimulator:
@@ -111,11 +115,11 @@ class ClusterSimulator:
                  seed: int = 0,
                  jitter: float = 0.03, max_containers=_UNSET,
                  concurrency=_UNSET, contention: float = 0.3,
-                 batching=_UNSET, record_sink=None):
+                 batching=_UNSET, sharding=_UNSET, record_sink=None):
         axes = {"placement": placement, "keepalive": keepalive,
                 "scaling": scaling, "coldstart": coldstart,
                 "concurrency": concurrency, "batching": batching,
-                "max_containers": max_containers}
+                "max_containers": max_containers, "sharding": sharding}
         if stack is not None:
             if keepalive_s is not None:
                 # keepalive_s is not one of the stack's axes, so it would
@@ -144,6 +148,7 @@ class ClusterSimulator:
         concurrency = axes["concurrency"]
         batching = axes["batching"]
         max_containers = axes["max_containers"]
+        sharding = axes["sharding"]
         self.stack = stack
         if isinstance(specs, FunctionSpec):
             specs = {specs.name: specs}
@@ -158,6 +163,48 @@ class ClusterSimulator:
         self.router = Router(fleets, default=next(iter(fleets)))
         self._fleets = fleets                       # hot-path alias
         self._default_fleet = fleets[self.router.default]
+
+        # ---- distributed inference (gang-scheduled shard fan-out) ------
+        # A normalized ShardingConfig (kind "none" flattens to None, the
+        # single fast-path gate).  Each routed fleet gets ``fanout`` lane
+        # fleets holding the shard sandboxes; lanes are NOT in the router
+        # (requests route to the parent, the gang path fans out), but they
+        # ARE in ``_evfleets`` so event handlers and eviction accounting
+        # see them.
+        if sharding is not None and getattr(sharding, "kind", "gang") == \
+                "none":
+            sharding = None
+        self.sharding = sharding
+        self._gang: dict[str, list] = {}      # parent fleet -> lane fleets
+        self._plans: dict = {}                # parent fleet -> ShardPlan
+        self._channels: dict = {}             # parent fleet -> CommsChannel
+        self._lane_parent: dict[str, str] = {}
+        self._reclaim_f: dict[int, float] = {}   # cid -> TTL reclaim factor
+        self._comms_bytes = 0.0       # activation bytes moved via channels
+        self._comms_cost = 0.0        # their per-GB transfer dollars
+        self._gang_prewarm_cost = 0.0
+        self._gang_prewarm_until = _NEG_INF
+        if sharding is not None:
+            from repro.core import distributed, providers
+            for name, fleet in fleets.items():
+                plan = distributed.plan_for_spec(fleet.spec, sharding.fanout)
+                lspec = distributed.lane_spec(fleet.spec, plan)
+                lanes = [Fleet(f"{name}#s{i}", lspec)
+                         for i in range(plan.fanout)]
+                self._gang[name] = lanes
+                self._plans[name] = plan
+                for lane in lanes:
+                    self._lane_parent[lane.name] = name
+                prof = providers.get(fleet.spec.provider)
+                self._channels[name] = prof.comms_channel(sharding.channel)
+            self._reclaim_rng = np.random.default_rng(
+                seed + _RECLAIM_SEED_OFFSET)
+            self._evfleets = dict(fleets)
+            for lanes in self._gang.values():
+                for lane in lanes:
+                    self._evfleets[lane.name] = lane
+        else:
+            self._evfleets = fleets
 
         self.placement: PlacementPolicy = make_placement(placement)
         self.keepalive: KeepalivePolicy = make_keepalive(
@@ -213,6 +260,7 @@ class ClusterSimulator:
                       and not self._lazy_evict and not self._track_arrivals
                       and not self._phased and self.concurrency == 1
                       and not self.max_containers and self.pool is None
+                      and self.sharding is None
                       and all(f.batcher is None for f in fleets.values())
                       # bill-idle (GPU serverless) fleets need per-eviction
                       # up-time accounting the fused loops skip
@@ -241,7 +289,10 @@ class ClusterSimulator:
 
     @property
     def evictions(self) -> int:
-        return sum(f.evictions for f in self.fleets.values())
+        # _evfleets includes the gang lane fleets (the shard sandboxes are
+        # where sharded evictions actually happen); without sharding it IS
+        # the router's fleet dict
+        return sum(f.evictions for f in self._evfleets.values())
 
     # ------------------------------------------------------------------ util
     def _jit(self, x: float) -> float:
@@ -290,6 +341,35 @@ class ClusterSimulator:
         if deadline > fleet.expire_sched.get(cid, -np.inf):
             fleet.expire_sched[cid] = deadline
             q.push(deadline, ev.EXPIRE, (fleet.name, cid))
+
+    def _ttl_for(self, fname: str) -> float:
+        """Keep-alive TTL for a fleet — gang lanes look up the *parent*
+        function's TTL (AdaptiveTTL observes gaps at the parent, where the
+        arrivals are; lane names would never accumulate a histogram)."""
+        ttl = self._ttl_const
+        if ttl is None:
+            if self._lane_parent:
+                fname = self._lane_parent.get(fname, fname)
+            ttl = self.keepalive.ttl(fname)
+        return ttl
+
+    def _reclaim_factor(self, cid: int) -> float:
+        """Effective-TTL factor for one gang lane sandbox.  Co-placed gangs
+        share one reclamation domain (factor 1.0 — the policy TTL holds
+        exactly); independently placed shards sit in different domains and
+        the provider may reclaim any of them *early* (one-sided lognormal,
+        clamped at 1.0 — reclamation never extends a TTL), which is what
+        multiplies the gang's cold tail."""
+        f = self._reclaim_f.get(cid)
+        if f is None:
+            sh = self.sharding
+            if sh.co_place or sh.reclaim_sigma <= 0.0:
+                f = 1.0
+            else:
+                f = min(1.0, float(self._reclaim_rng.lognormal(
+                    0.0, sh.reclaim_sigma)))
+            self._reclaim_f[cid] = f
+        return f
 
     # -------------------------------------------------- cold-start phases
     def _schedule_phases(self, q: EventQueue, fname: str, c: Container,
@@ -351,7 +431,7 @@ class ClusterSimulator:
     def _on_phase_done(self, q: EventQueue, t: float, payload) -> None:
         fname, cid = payload
         if fname:
-            fleet = self.fleets[fname]
+            fleet = self._evfleets[fname]
             c = fleet.containers.get(cid)
         else:
             fleet = None
@@ -385,8 +465,10 @@ class ClusterSimulator:
             c.ready_at = t
             c.last_used_at = t
             fleet.idle.append((t, cid))
-            self._schedule_expire(q, fleet, cid,
-                                  t + self.keepalive.ttl(fname))
+            ttl = self._ttl_for(fname)
+            if fname in self._lane_parent:
+                ttl *= self._reclaim_factor(cid)
+            self._schedule_expire(q, fleet, cid, t + ttl)
         self.coldstart.on_loaded(fname, fleet.spec, t)
 
     @staticmethod
@@ -445,6 +527,12 @@ class ClusterSimulator:
         q = EventQueue()
         heap = q._heap
         n_arr = len(arr)
+        if self.sharding is not None and arr:
+            # gang prewarm replaces reclaimed shard sandboxes, but only
+            # while demand can still arrive — without this horizon the
+            # evict -> prewarm -> evict cycle would outlive the trace and
+            # the drain loop would never terminate
+            self._gang_prewarm_until = max(r.arrival_s for r in arr)
         last = _NEG_INF
         merged = True
         for r in arr:
@@ -949,8 +1037,11 @@ class ClusterSimulator:
         for _fn, size_mb, written_at in self.coldstart.snapshots():
             cost += billing.snapshot_storage_cost(
                 size_mb, max(0.0, t_end - written_at))
+        # sharded fan-out: per-GB activation transfer through the comms
+        # channel + the gang-prewarm sandboxes' setup ticks
+        cost += self._comms_cost + self._gang_prewarm_cost
         cap = 0.0
-        for f in self._fleets.values():
+        for f in self._evfleets.values():
             if not f.bill_idle:
                 continue
             up = f.up_seconds
@@ -963,7 +1054,7 @@ class ClusterSimulator:
     # ------------------------------------------------------------- complete
     def _on_complete(self, t: float, payload) -> None:
         fname, cid, end = payload
-        fleet = self._fleets[fname]
+        fleet = self._evfleets[fname]
         inflight_ends = fleet.inflight_ends
         ends = inflight_ends.get(cid)
         if ends:
@@ -979,15 +1070,23 @@ class ClusterSimulator:
     # --------------------------------------------------------------- expire
     def _on_expire(self, q: EventQueue, t: float, payload) -> None:
         fname, cid = payload
-        fleet = self._fleets[fname]
+        fleet = self._evfleets[fname]
         c = fleet.containers.get(cid)
         if c is None or c.state is not State.WARM:
             return
-        ttl = self._ttl_const
-        if ttl is None:
-            ttl = self.keepalive.ttl(fname)
+        is_lane = fname in self._lane_parent
+        ttl = self._ttl_for(fname)
+        if is_lane:
+            # a lane sandbox's *effective* TTL carries its placement
+            # domain's reclaim factor (1.0 when co-placed)
+            ttl *= self._reclaim_factor(cid)
         if t - c.last_used_at >= ttl - 1e-9:
             self._evict(fleet, cid, t)
+            if is_lane:
+                self._reclaim_f.pop(cid, None)
+                sh = self.sharding
+                if sh.gang_prewarm and t < self._gang_prewarm_until:
+                    self._gang_prewarm(q, fleet, t)
         else:
             # Not yet expired under the *current* TTL (it may have grown, or
             # the container was reused).  A reuse already scheduled a later
@@ -997,7 +1096,7 @@ class ClusterSimulator:
     # -------------------------------------------------------------- prewarm
     def _on_prewarm_ready(self, q: EventQueue, t: float, payload) -> None:
         fname, cid = payload
-        fleet = self.fleets[fname]
+        fleet = self._evfleets[fname]
         fleet.pending_prewarms -= 1
         fleet.prewarm_etas.remove(t)
         c = fleet.containers[cid]
@@ -1007,10 +1106,17 @@ class ClusterSimulator:
         c.ready_at = t
         c.last_used_at = t
         fleet.idle.append((t, cid))
-        self._schedule_expire(q, fleet, cid, t + self.keepalive.ttl(fname))
+        ttl = self._ttl_for(fname)
+        if fname in self._lane_parent:
+            ttl *= self._reclaim_factor(cid)
+        self._schedule_expire(q, fleet, cid, t + ttl)
 
     def _maybe_prewarm(self, q: EventQueue, fleet: Fleet, t: float) -> None:
         if not self._track_arrivals:     # LambdaImplicit never prewarms
+            return
+        if self.sharding is not None:
+            # parent fleets hold no sandboxes under sharding — replacement
+            # warming happens per lane via the gang_prewarm knob instead
             return
         n = self.scaling.prewarm_count(
             now=t, arrivals=fleet.arrivals,
@@ -1119,10 +1225,168 @@ class ClusterSimulator:
                 if c.state in (State.WARM, State.BUSY)
                 and fleet.inflight(cid) < self.concurrency]
 
+    def _gang_prewarm(self, q: EventQueue, lane: Fleet, t: float) -> None:
+        """Replace a just-reclaimed shard sandbox ahead of demand: start a
+        fresh lane cold start now so the *next* gang request finds the
+        lane warm instead of eating a full gang cold.  The setup ticks
+        bill as platform-side spend (``mitigation_cost``) — requests never
+        see this container until PREWARM_READY parks it idle."""
+        c = Container(lane.spec, created_at=t)
+        self._add_container(lane, c)
+        lane.pending_prewarms += 1
+        self.prewarms += 1
+        setup = self._jit(lane.cold_total_s)
+        lane.prewarm_etas.append(t + setup)
+        q.push(t + setup, ev.PREWARM_READY, (lane.name, c.cid))
+        ticks = _ceil(setup / _TICK_S)
+        if ticks < 1:
+            ticks = 1
+        self._gang_prewarm_cost += ticks * lane.price_100ms
+
+    def _dispatch_gang(self, q: EventQueue, fleet: Fleet, t: float,
+                       reqs: list) -> None:
+        """One logical request fans out to ``fleet``'s gang: every lane
+        (shard sandbox fleet) serves a sub-invoke, and the request joins
+        on the slowest lane plus the decode steps' channel time.  The
+        request is cold if ANY lane cold-started — the FSD-Inference tail
+        multiplication — and its bill is the sum of the lanes' exec ticks
+        plus the per-GB activation transfer (billed into
+        ``mitigation_cost`` by ``_finalize``).
+        """
+        sh = self.sharding
+        lanes = self._gang[fleet.name]
+        plan = self._plans[fleet.name]
+        b = len(reqs)
+        bmul = 1.0
+        if b > 1:
+            curve = fleet.batch_curve
+            if curve is not None:
+                bmul = b * batch_rel_cost(curve, b)
+            elif fleet.batching is not None:
+                bmul = 1.0 + fleet.batching.amortization * (b - 1)
+        heap, seq = q._heap, q._seq
+        ttl = self._ttl_for(fleet.name)
+        any_cold = False
+        cold_kind = ""
+        start_max = t           # all shards ready: the gang's exec begin
+        crit_end = _NEG_INF     # slowest lane's own completion
+        crit_cid = -1
+        crit_walls = (0.0, 0.0, 0.0, 0.0)
+        cost = 0.0              # per-request exec $ summed over lanes
+        for lane in lanes:
+            if lane.idle_stale:
+                lane.prune_idle()
+            idle = lane.idle
+            if idle:
+                entry = max(idle)            # MRU within the lane
+                idle.remove(entry)
+                c = lane.containers[entry[1]]
+                cold = False
+            else:
+                cold = True
+                c = Container(lane.spec, created_at=t)
+                lane.cold_starts += 1
+                self._add_container(lane, c)
+            cid = c.cid
+            # per lane: exec draw first, then cold-setup draw — the same
+            # RNG discipline as the single-sandbox path, N times over
+            exec_s = self._jit(lane.warm_exec_s) * bmul
+            prov = boot = load = rest = 0.0
+            kind = ""
+            if cold:
+                if not self._phased:
+                    bd = lane.cold_bd
+                    total = lane.cold_total_s
+                    setup = self._jit(total)
+                    factor = setup / total if total > 0 else 0.0
+                    prov = bd.provision_s * factor
+                    boot = bd.bootstrap_s * factor
+                    load = setup - prov - boot
+                    c.mark_done(Phase.PROVISION, prov)
+                    c.mark_done(Phase.BOOTSTRAP, boot)
+                    c.mark_done(Phase.LOAD, load)
+                    kind = "full"
+                else:
+                    setup, walls = self._cold_setup(q, lane, c, t)
+                    prov = walls.get(Phase.PROVISION, 0.0)
+                    boot = walls.get(Phase.BOOTSTRAP, 0.0)
+                    load = walls.get(Phase.LOAD, 0.0)
+                    rest = walls.get(Phase.RESTORE, 0.0)
+                    kind = self._cold_kind(walls)
+                start = t + setup
+                c.ready_at = start
+                if not any_cold:
+                    cold_kind = kind
+                any_cold = True
+            else:
+                ra = c.ready_at
+                start = t if t >= ra else ra
+            end = start + exec_s + _NET_S
+            c.state = State.BUSY
+            if end > c.last_used_at:
+                c.last_used_at = end
+            c.invocations += b
+            ends = lane.inflight_ends.get(cid)
+            if ends is None:
+                ends = lane.inflight_ends[cid] = []
+            ends.append(end)
+            heappush(heap, (end, next(seq), ev.COMPLETE,
+                            (lane.name, cid, end)))
+            deadline = end + ttl * self._reclaim_factor(cid)
+            if deadline > lane.expire_sched.get(cid, _NEG_INF):
+                lane.expire_sched[cid] = deadline
+                heappush(heap, (deadline, next(seq), ev.EXPIRE,
+                                (lane.name, cid)))
+            ticks = _ceil((exec_s / b) / _TICK_S)
+            if ticks < 1:
+                ticks = 1
+            lane_cost = ticks * lane.price_100ms
+            cost += lane_cost
+            if lane.bill_idle:
+                lane.billed_cost += lane_cost * b
+            if start > start_max:
+                start_max = start
+            if end > crit_end:
+                crit_end = end
+                crit_cid = cid
+                crit_walls = (prov, boot, load, rest)
+        if any_cold:
+            fleet.cold_starts += 1    # request-level gang colds
+        # ---- join on the slowest lane + the decode steps' channel time
+        comms_s = 0.0
+        if plan.bytes_per_step > 0.0:
+            step_b = plan.step_bytes(b)            # per shard, this batch
+            comms_s = self._channels[fleet.name].request_s(
+                step_b, sh.steps_per_request)
+            moved = step_b * plan.fanout * sh.steps_per_request
+            self._comms_bytes += moved
+            self._comms_cost += billing.transfer_cost(
+                moved, self._channels[fleet.name].usd_per_gb)
+        end = crit_end + comms_s
+        wall = end - start_max
+        prov, boot, load, rest = crit_walls if any_cold else (0.0, 0.0,
+                                                             0.0, 0.0)
+        append_row = self.records.append_row
+        share = wall / b
+        if b == 1:
+            req = reqs[0]
+            append_row((req.rid, req.arrival_s, start_max, end, any_cold,
+                        wall, wall, cost, crit_cid, fleet.memory_mb,
+                        req.tag, fleet.name, 1, cold_kind, prov, boot,
+                        load, rest))
+        else:
+            for req in reqs:
+                append_row((req.rid, req.arrival_s, start_max, end,
+                            any_cold, wall, share, cost, crit_cid,
+                            fleet.memory_mb, req.tag, fleet.name, b,
+                            cold_kind, prov, boot, load, rest))
+
     def _dispatch(self, q: EventQueue, fleet: Fleet, t: float,
                   reqs: list) -> None:
         """Place ``reqs`` (a single request, or one formed batch) on a warm
         container or cold-start one, honoring the shared container cap."""
+        if self.sharding is not None:
+            return self._dispatch_gang(q, fleet, t, reqs)
         concurrency = self.concurrency
         if concurrency > 1 or self.placement.needs_inflight:
             inflight = {cid: fleet.inflight(cid) for cid in fleet.live}

@@ -487,10 +487,47 @@ def make_scaling(s) -> ScalingPolicy:
     raise KeyError(f"unknown scaling policy {s!r}")
 
 
+_MEASURED_MODELS: Optional[dict] = None
+
+
+def _measured_models() -> dict:
+    """The host's measured calibration entries (``{model: entry}``), or
+    ``{}`` when no valid cache exists.  Memoized per process: scaling
+    policies call ``warm_exec_estimate`` on every poll tick and must not
+    re-read (or re-reject) the cache file each time."""
+    global _MEASURED_MODELS
+    if _MEASURED_MODELS is None:
+        from repro.core import calibration
+        cache = calibration.load_cache()
+        _MEASURED_MODELS = dict(cache["models"]) if cache else {}
+    return _MEASURED_MODELS
+
+
 def warm_exec_estimate(spec) -> float:
     """Deterministic warm service-time estimate for scaling decisions,
     under the spec's provider profile (a GPU-serverless container gets the
-    whole host, not a memory-proportional share)."""
+    whole host, not a memory-proportional share).
+
+    When the sim-to-real calibration loop has measured this model on this
+    host (a ``load_cache``-valid entry whose ``warm_exec_s`` is the steady
+    warm step wall time on a full core), that measurement is the CPU-cost
+    base; otherwise the handler's analytic ``base_cpu_seconds`` stands in.
+    Either way the provider profile maps CPU seconds to wall time for the
+    spec's memory tier."""
     from repro.core import providers
+    name = spec.handler.name
+    models = _measured_models()
+    entry, scale = models.get(name), 1.0
+    if entry is None and "#shard" in name:
+        # gang lane handlers are "<model>#shard<N>"; the measurement is
+        # per model, and a lane runs 1/N of it (same factor lane_spec
+        # applies to the analytic constant)
+        base_name, _, fan = name.partition("#shard")
+        entry = models.get(base_name)
+        if fan.isdigit():
+            scale = 1.0 / max(int(fan), 1)
+    base = spec.handler.base_cpu_seconds
+    if entry and entry.get("warm_exec_s"):
+        base = float(entry["warm_exec_s"]) * scale
     return providers.get(getattr(spec, "provider", "lambda")).exec_time(
-        spec.handler.base_cpu_seconds, spec.memory_mb)
+        base, spec.memory_mb)

@@ -53,6 +53,12 @@ class ProviderProfile:
     natural keep-alive TTL a scenario tunes its stacks to.
     ``lambda_limits``: enforce Lambda's memory tiers + 512 MB package cap
     at deploy time.
+    ``storage_*`` / ``queue_*``: the two shard-to-shard comms channels a
+    gang-scheduled fan-out can route activations through (serverless
+    workers have no direct sockets).  Storage is the S3-shaped channel —
+    slow per hop, wide, cheap per GB; the queue is SQS-shaped — fast per
+    message, thin, expensive per GB.  ``repro.core.distributed`` turns
+    these into ``CommsChannel`` objects via :meth:`comms_channel`.
     """
     name: str
     provision_base_s: float = LAMBDA_PROVISION_BASE_S
@@ -63,6 +69,12 @@ class ProviderProfile:
     bill_idle: bool = False
     scaledown_s: float = 480.0
     lambda_limits: bool = True
+    storage_hop_s: float = 0.010
+    storage_gbps: float = 1.0
+    storage_usd_gb: float = 0.01
+    queue_hop_s: float = 0.004
+    queue_gbps: float = 0.5
+    queue_usd_gb: float = 0.04
 
     # ----------------------------------------------------- resource model
     def cpu_share(self, memory_mb: float) -> float:
@@ -92,6 +104,24 @@ class ProviderProfile:
         if self.per_second_usd:
             return self.per_second_usd * billing.TICK_S
         return billing.price_per_100ms(memory_mb)
+
+    # -------------------------------------------------------------- comms
+    def comms_channel(self, kind: str = "storage"):
+        """The provider's ``kind`` shard-to-shard channel ("storage" or
+        "queue") as a ``repro.core.distributed.CommsChannel``."""
+        from repro.core.distributed import CommsChannel
+        if kind == "storage":
+            return CommsChannel(name=f"{self.name}:storage",
+                                hop_s=self.storage_hop_s,
+                                gbps=self.storage_gbps,
+                                usd_per_gb=self.storage_usd_gb)
+        if kind == "queue":
+            return CommsChannel(name=f"{self.name}:queue",
+                                hop_s=self.queue_hop_s,
+                                gbps=self.queue_gbps,
+                                usd_per_gb=self.queue_usd_gb)
+        raise KeyError(f"unknown comms channel {kind!r}; expected "
+                       f"'storage' or 'queue'")
 
 
 LAMBDA = ProviderProfile(name="lambda")

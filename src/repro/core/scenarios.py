@@ -47,7 +47,7 @@ from repro.core import workload as wl
 from repro.core.cluster import BatchingConfig
 from repro.core.sla import GPU_INTERACTIVE, INTERACTIVE, SLA
 from repro.core.stack import (BASELINE, ColdstartConfig, KeepaliveConfig,
-                              PolicyStack, ScalingConfig)
+                              PolicyStack, ScalingConfig, ShardingConfig)
 
 # Named policy stacks: the single-axis stacks differ from ``baseline`` on
 # exactly one axis, so a scenario verdict attributes the win to that axis;
@@ -82,6 +82,17 @@ POLICY_STACKS: dict = {
         scaling="predictive", coldstart="snapshot", batching=_BATCH),
     "pool_batching_predictive": BASELINE.with_(
         scaling="predictive", coldstart="layered", batching=_BATCH),
+    # --- distributed inference (gang-scheduled shard fan-out) -----------
+    # independent placement multiplies the cold tail with fan-out (the
+    # FSD-Inference failure mode the sharded_110b scenario demonstrates);
+    # ``sharded_gang`` co-places the gang in one reclamation domain and
+    # re-warms reclaimed shards, recovering the WIN
+    "sharded_4": BASELINE.with_(sharding=ShardingConfig(kind="gang",
+                                                        fanout=4)),
+    "sharded_8": BASELINE.with_(sharding=ShardingConfig(kind="gang",
+                                                        fanout=8)),
+    "sharded_gang": BASELINE.with_(sharding=ShardingConfig(
+        kind="gang", fanout=8, co_place=True, gang_prewarm=True)),
 }
 
 # which Scenario.tuning config type tunes which PolicyStack axis
@@ -123,6 +134,13 @@ class Scenario:
                                              # Iterator[Request]: a lazy
                                              # variant of ``trace`` for
                                              # day-scale streaming runs
+    sweep_axes: Optional[dict] = None   # suite sweep override: {axis:
+                                        # values}; None keeps the suite's
+                                        # default cross-product (AXES).
+                                        # Scenarios probing one axis (e.g.
+                                        # the sharding fan-out ladder) pin
+                                        # the others to the baseline kind
+                                        # so the report stays readable.
 
     def __post_init__(self):
         for cfg in self.tuning:
@@ -405,6 +423,50 @@ register(Scenario(
     tiny_scale=0.2,
     tuning=(KeepaliveConfig(kind="fixed", ttl_s=300.0),
             KeepaliveConfig(kind="adaptive", ttl_s=300.0)),
+))
+
+# sharded_110b: distributed inference on a model that cannot fit one
+# sandbox at real scale (qwen1.5-110b), fanned out across N gang-scheduled
+# shard sandboxes (DESIGN.md §10; FSD-Inference, arXiv:2403.15195).  The
+# same sparse trickle the paper's cold-start regime uses becomes an
+# amplifier under fan-out: the request is cold if ANY shard is cold, and
+# independently placed shards also get reclaimed early (one-sided
+# per-domain TTL factors), so the Lambda-baseline cold rate GROWS with N —
+# the report's N ∈ {1, 4, 8} ladder shows the 1-(1-p)^N law in the cold
+# column.  The tuned ``sharded_gang`` stack recovers the WIN at N=8:
+# co-placement pins the gang in one reclamation domain (shards live and
+# die together, like a single sandbox) and gang prewarm replaces a
+# reclaimed shard ahead of demand, so only the very first request pays a
+# gang cold.  The sweep pins the non-sharding axes to the baseline kinds —
+# the scenario grades the sharding axis, and the fan-out ladder is the
+# story, not a 640-point cross-product.
+SHARDED_RATE_RPS = 0.004
+SHARDED_DURATION_S = 250_000.0
+
+register(Scenario(
+    name="sharded_110b",
+    description="Gang-scheduled 110B shard fan-out on a sparse trickle: "
+                "cold-if-any-shard-cold multiplies the tail with N; "
+                "co-placement + gang prewarm recover the WIN.",
+    functions=(FleetFunction("qwen1.5-110b", 1536),),
+    trace=lambda fns, seed, scale: wl.poisson(
+        SHARDED_RATE_RPS, SHARDED_DURATION_S * scale, seed=seed),
+    sla=INTERACTIVE,
+    expected_winner="sharded_gang",
+    rival="sharded_8",
+    seed=29,
+    tiny_scale=0.02,
+    sweep_axes={
+        "placement": ("mru",), "keepalive": ("fixed",),
+        "scaling": ("lambda",), "coldstart": ("full",),
+        "concurrency": (1,), "batching": (None,),
+        "sharding": (None,
+                     ShardingConfig(kind="gang", fanout=4),
+                     ShardingConfig(kind="gang", fanout=8),
+                     ShardingConfig(kind="gang", fanout=8, co_place=True),
+                     ShardingConfig(kind="gang", fanout=8, co_place=True,
+                                    gang_prewarm=True)),
+    },
 ))
 
 register(Scenario(

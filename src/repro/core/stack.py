@@ -13,7 +13,8 @@ policy configuration a *value*:
     the selected ``kind`` never reads raises rather than silently
     dropping intent), so equality and hashing mean "same behaviour",
     robust against axis reordering.
-  * ``PolicyStack`` bundles all seven axes.  ``materialize()`` builds
+  * ``PolicyStack`` bundles all eight axes (the distributed-inference
+    ``ShardingConfig`` joined in PR 9).  ``materialize()`` builds
     *fresh* policy instances (the single place where state isolation
     between runs is guaranteed — no deep-copy rules at call sites),
     ``with_()`` derives variants, ``to_dict()/from_dict()`` give a JSON
@@ -167,6 +168,56 @@ class ColdstartConfig:
         return PackageCache()
 
 
+# ------------------------------------------------------------------- sharding
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """Distributed-inference axis: ``none`` (single-sandbox invokes, the
+    baseline and every pre-existing stack) or ``gang`` (one request fans
+    out to ``fanout`` shard sub-invokes that join on the slowest —
+    DESIGN.md §10).
+
+    ``co_place`` pins the gang's sandboxes to one reclamation domain, so
+    shard idle lifetimes stop being independent (the FSD-Inference
+    'bin-packed workers' placement); ``gang_prewarm`` re-warms a reclaimed
+    shard sandbox immediately instead of waiting for the next request to
+    eat the full gang cold.  ``channel`` picks the provider-mediated
+    activation path ("storage" or "queue"); ``steps_per_request`` is the
+    decode steps one request moves through it; ``reclaim_sigma`` spreads
+    the shard sandboxes' effective TTLs (lognormal, one-sided — reclaim
+    never comes *later* than the policy TTL) when NOT co-placed.  All
+    knobs must stay at their defaults under ``none``."""
+
+    kind: str = "none"
+    fanout: int = 1
+    co_place: bool = False
+    gang_prewarm: bool = False
+    channel: str = "storage"
+    steps_per_request: int = 8
+    reclaim_sigma: float = 0.6
+
+    def __post_init__(self):
+        if self.kind not in ("none", "gang"):
+            raise KeyError(f"unknown sharding kind {self.kind!r}; "
+                           f"known: ['gang', 'none']")
+        if self.channel not in ("storage", "queue"):
+            raise KeyError(f"unknown comms channel {self.channel!r}; "
+                           f"known: ['queue', 'storage']")
+        object.__setattr__(self, "fanout", int(self.fanout))
+        object.__setattr__(self, "steps_per_request",
+                           int(self.steps_per_request))
+        if self.kind == "none":
+            _require_defaults(self, ("fanout", "co_place", "gang_prewarm",
+                                     "channel", "steps_per_request",
+                                     "reclaim_sigma"))
+        elif self.fanout < 1:
+            raise ValueError(f"fanout must be >= 1, got {self.fanout}")
+
+    def materialize(self):
+        """The cluster's sharding kwarg: ``None`` for single-sandbox
+        invokes (the fast-path gate key), else this frozen config."""
+        return None if self.kind == "none" else self
+
+
 # ------------------------------------------------------------------ coercions
 # Instance coercion matches EXACT registry types only (``type(x) is ...``):
 # a hand-written subclass carries behaviour a serializable config cannot
@@ -269,14 +320,27 @@ def _coerce_batching(b) -> Optional[BatchingConfig]:
                     f"feature)")
 
 
+def _coerce_sharding(s) -> ShardingConfig:
+    if isinstance(s, ShardingConfig):
+        return s
+    if s is None:
+        return ShardingConfig()
+    if isinstance(s, str):
+        return ShardingConfig(kind=s)
+    if isinstance(s, Mapping):
+        return ShardingConfig(**s)
+    raise TypeError(f"sharding must be None, a ShardingConfig, a kind name "
+                    f"('none'/'gang'), or its dict form, got {s!r}")
+
+
 # ---------------------------------------------------------------- PolicyStack
 @dataclasses.dataclass(frozen=True)
 class PolicyStack:
-    """One point in the policy space: all seven axes, as a frozen value.
+    """One point in the policy space: all eight axes, as a frozen value.
 
     The default instance IS the Lambda-2017 baseline (MRU placement, fixed
     480 s TTL, implicit scaling, full colds, concurrency 1, no batching,
-    no container cap) — the stack the bit-parity goldens pin.
+    no container cap, no sharding) — the stack the bit-parity goldens pin.
 
     Axis values coerce on construction: registry names (``"adaptive"``),
     axis configs, their dict forms, and registry policy *instances* (their
@@ -291,6 +355,7 @@ class PolicyStack:
     concurrency: int = 1
     batching: Optional[BatchingConfig] = None
     max_containers: int = 0
+    sharding: ShardingConfig = ShardingConfig()
 
     def __post_init__(self):
         object.__setattr__(self, "placement",
@@ -303,6 +368,7 @@ class PolicyStack:
         object.__setattr__(self, "concurrency", int(self.concurrency))
         object.__setattr__(self, "batching", _coerce_batching(self.batching))
         object.__setattr__(self, "max_containers", int(self.max_containers))
+        object.__setattr__(self, "sharding", _coerce_sharding(self.sharding))
 
     # ------------------------------------------------------------- behaviour
     def materialize(self) -> dict:
@@ -316,7 +382,8 @@ class PolicyStack:
                     coldstart=self.coldstart.materialize(),
                     concurrency=self.concurrency,
                     batching=self.batching,
-                    max_containers=self.max_containers)
+                    max_containers=self.max_containers,
+                    sharding=self.sharding.materialize())
 
     def with_(self, **overrides) -> "PolicyStack":
         """Derive a variant; values coerce like constructor arguments."""
@@ -336,7 +403,8 @@ class PolicyStack:
                 "concurrency": self.concurrency,
                 "batching": (dataclasses.asdict(self.batching)
                              if self.batching is not None else None),
-                "max_containers": self.max_containers}
+                "max_containers": self.max_containers,
+                "sharding": dataclasses.asdict(self.sharding)}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "PolicyStack":
@@ -367,15 +435,21 @@ class PolicyStack:
         """Canonical report ordering: kind per axis, in axis order.  Two
         stacks may share a key (same kinds, different knobs); use the stack
         itself — equality and hash are canonical — as the identity key."""
+        sh = self.sharding
+        if sh.kind == "none":
+            shard = "-"
+        else:
+            shard = f"gang{sh.fanout}" + ("+co" if sh.co_place else "") + \
+                ("+pw" if sh.gang_prewarm else "")
         return (self.placement, self.keepalive.kind, self.scaling.kind,
                 self.coldstart.kind, self.concurrency,
-                self.batching is not None)
+                self.batching is not None, shard)
 
     # ------------------------------------------------------------ legacy shim
     @classmethod
     def from_kwargs(cls, *, placement="mru", keepalive=None, scaling=None,
                     coldstart=None, concurrency: int = 1, batching=None,
-                    max_containers: int = 0,
+                    max_containers: int = 0, sharding=None,
                     keepalive_s: float = 480.0) -> "PolicyStack":
         """Build a stack from the legacy seven-kwarg surface.  Mirrors the
         old ``make_*`` defaults: ``keepalive=None`` or a registry name uses
@@ -386,7 +460,8 @@ class PolicyStack:
             ka = _coerce_keepalive(keepalive)
         return cls(placement=placement, keepalive=ka, scaling=scaling,
                    coldstart=coldstart, concurrency=concurrency,
-                   batching=batching, max_containers=max_containers)
+                   batching=batching, max_containers=max_containers,
+                   sharding=sharding)
 
 
 #: The Lambda-2017 baseline stack (also ``PolicyStack()``).

@@ -239,6 +239,52 @@ def run_pair(arch_id: str, shape_id: str, *, multi_pod: bool, out_dir: str,
     return rec
 
 
+def comms_summary(arch_id: str, shape_id: str, *, multi_pod: bool = False,
+                  mesh=None) -> dict:
+    """Stable structured view of one pair's per-shard communication volume.
+
+    Lowers + compiles the (arch, shape) step on ``mesh`` (GSPMD inserts
+    collectives only during compilation, so the compiled module is the
+    ground truth) and returns the per-chip link bytes one step execution
+    moves, by collective kind.  This is the calibration target for the
+    cluster simulator's analytic ``repro.core.distributed.plan_shards``
+    model: ``per_shard_bytes`` here is what one gang lane ships per decode
+    step, and tests/test_sharding_dryrun.py pins the analytic estimate to
+    within 10% of it.
+
+    Returned dict (stable keys — treat as API):
+      ``arch``, ``shape``, ``kind``, ``mesh``, ``axes``,
+      ``model_parallel`` (model-axis size N, the gang fan-out),
+      ``loop_trips``, ``counts`` (collective-op counts by kind),
+      ``per_kind`` (per-chip link bytes by kind, loop-weighted),
+      ``per_shard_bytes`` (sum over kinds — one shard, one step),
+      ``total_bytes`` (all N shards, one step).
+    """
+    from repro import shardctx
+    from repro.launch.mesh import axis_size, model_axis
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    with shardctx.use_mesh(mesh):
+        lowered, meta, cfg = lower_pair(arch_id, shape_id,
+                                        multi_pod=multi_pod, mesh=mesh)
+    compiled = lowered.compile()
+    try:
+        hlo_text = compiled.as_text()
+    except Exception:  # pragma: no cover - CPU backend always prints
+        hlo_text = lowered.as_text()
+    trips = loop_trips(cfg, meta["kind"], SHAPES[shape_id].seq_len,
+                       meta.get("num_micro", 1))
+    coll = hlo_lib.collective_bytes(hlo_text, loop_trips=trips)
+    counts = coll.pop("counts")
+    per_shard = coll.pop("total")
+    msz = axis_size(mesh, model_axis(mesh))
+    return {"arch": arch_id, "shape": shape_id, "kind": meta["kind"],
+            "mesh": meta["mesh"], "axes": meta["axes"],
+            "model_parallel": int(msz), "loop_trips": list(trips),
+            "counts": counts, "per_kind": dict(coll),
+            "per_shard_bytes": float(per_shard),
+            "total_bytes": float(per_shard) * int(msz)}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)

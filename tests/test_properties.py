@@ -174,3 +174,65 @@ def test_adamw_clip_bounds_update(seed):
     p2, _, m = opt.update(params, g, state)
     step_size = float(jnp.max(jnp.abs(p2["w"] - params["w"])))
     assert step_size < 0.5  # bounded despite the huge gradient
+
+
+# ----------------------------------------------------- distributed inference
+@given(st.floats(0.0, 1.0), st.integers(1, 64))
+def test_gang_cold_probability_law(p, n):
+    """cold-if-any-shard-cold under independence: 1 - (1-p)^n, a proper
+    probability, monotone non-decreasing in both p and n."""
+    from repro.core.distributed import gang_cold_probability
+    g = gang_cold_probability(p, n)
+    assert 0.0 <= g <= 1.0
+    assert math.isclose(g, 1.0 - (1.0 - p) ** n, abs_tol=1e-12)
+    assert g >= p - 1e-12                       # n=1 is the floor
+    assert gang_cold_probability(p, n + 1) >= g - 1e-12
+
+
+@given(st.floats(1e-4, 0.1), st.floats(0.1, 10.0), st.floats(0.0, 1e10),
+       st.floats(0.0, 1e10), st.integers(1, 64))
+def test_comms_time_and_cost_monotone_in_bytes(hop, gbps, b1, b2, steps):
+    from repro.core.distributed import CommsChannel, comms_cost
+    ch = CommsChannel(name="x", hop_s=hop, gbps=gbps, usd_per_gb=0.01)
+    lo, hi = sorted((b1, b2))
+    assert ch.step_s(lo) <= ch.step_s(hi)
+    assert ch.request_s(lo, steps) <= ch.request_s(hi, steps)
+    assert comms_cost(lo, ch) <= comms_cost(hi, ch)
+    assert comms_cost(hi, ch) >= 0.0
+
+
+@given(st.integers(2, 32), st.integers(2, 32), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_comms_bytes_monotone_in_fanout(n1, n2, batch):
+    """Per-shard ring bytes grow with the fan-out ((N-1)/N factor), so
+    the modelled channel time never shrinks as the gang widens."""
+    from repro.core.distributed import plan_shards
+    lo, hi = sorted((n1, n2))
+    a = plan_shards("qwen1.5-110b", lo, batch=batch)
+    b = plan_shards("qwen1.5-110b", hi, batch=batch)
+    assert a.step_bytes(batch) <= b.step_bytes(batch) + 1e-9
+    assert a.total_step_bytes(batch) <= b.total_step_bytes(batch) + 1e-9
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.002, 0.02))
+@settings(max_examples=8, deadline=None)
+def test_coplacement_cold_starts_never_worse_property(seed, rate):
+    """Aggregate dominance on identical traces: pinning the gang in one
+    reclamation domain (co_place) never produces MORE request colds than
+    independent placement — each extra co-cold would need an earlier
+    independent reclaim that itself cost a cold."""
+    from repro.core.cluster import ClusterSimulator
+    from repro.core.stack import ShardingConfig
+
+    h = Handler(name="m", base_cpu_seconds=0.05, bootstrap_cpu_seconds=1.0,
+                package_mb=45.0, peak_memory_mb=100.0)
+    spec = FunctionSpec(handler=h, memory_mb=1024)
+    trace = poisson(rate, 4000.0, seed=seed % 10_000)
+    colds = {}
+    for co in (False, True):
+        sim = ClusterSimulator(
+            spec, seed=seed % 10_000,
+            sharding=ShardingConfig(kind="gang", fanout=4, co_place=co))
+        recs = sim.run(trace)
+        colds[co] = sum(1 for r in recs if r.cold)
+    assert colds[True] <= colds[False]

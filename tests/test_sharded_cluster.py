@@ -1,0 +1,328 @@
+"""Gang-scheduled shard fan-out: the distributed subsystem's analytics
+(``repro.core.distributed``), the cluster's gang dispatch semantics (cold
+if ANY shard cold, join on the slowest lane + channel time, comms dollars
+in ``mitigation_cost``), and the ``sharded_110b`` scenario verdict at tiny
+scale.  Deterministic counterparts of the hypothesis properties in
+tests/test_properties.py run here unconditionally."""
+import itertools
+
+import pytest
+
+import repro.core.container as container_mod
+from repro.core import distributed
+from repro.core.cluster import ClusterSimulator
+from repro.core.cluster import policies as pol
+from repro.core.function import FunctionSpec, Handler
+from repro.core.platform import ServerlessPlatform
+from repro.core.providers import LAMBDA, get as get_provider
+from repro.core.stack import PolicyStack, ShardingConfig
+from repro.core.workload import poisson
+
+
+def _reset_cids():
+    container_mod._ids = itertools.count()
+
+
+def _llm_spec():
+    """The 110B fleet the sharded scenario deploys (pinned fallback
+    calibration, so the numbers are host-independent)."""
+    plat = ServerlessPlatform(seed=0, use_fallback_calibration=True)
+    return plat.deploy_model("qwen1.5-110b", 1536)
+
+
+def _run(spec, trace, *, sharding=None, seed=0, **kw):
+    _reset_cids()
+    sim = ClusterSimulator(spec, seed=seed, sharding=sharding, **kw)
+    recs = sim.run(trace)
+    return sim, recs
+
+
+def _cold_count(recs):
+    return sum(1 for r in recs if r.cold)
+
+
+# ------------------------------------------------------------ shard plans
+def test_plan_shards_fractions_and_bytes():
+    plan = distributed.plan_shards("qwen1.5-110b", 8)
+    assert plan.fanout == 8
+    # Megatron fractions sit just above 1/N (norms stay replicated)
+    assert 1.0 / 8 < plan.memory_fraction < 1.0 / 8 + 0.01
+    assert plan.load_fraction == plan.memory_fraction
+    assert plan.bytes_per_step > 0
+    # the analytic decomposition: 2/layer + embedding ARs, one logits AG
+    kinds = {k: (n, b) for k, n, b in plan.collectives}
+    assert kinds["all-reduce"][0] == 2 * 80 + 1
+    assert kinds["all-gather"][0] == 1
+    assert sum(b for _, _, b in plan.collectives) == \
+        pytest.approx(plan.bytes_per_step)
+    # bytes scale linearly with batch; total multiplies by fanout
+    assert plan.step_bytes(4) == pytest.approx(4 * plan.bytes_per_step)
+    assert plan.total_step_bytes(1) == pytest.approx(
+        8 * plan.bytes_per_step)
+
+
+def test_plan_shards_fanout1_and_unknown_arch():
+    p1 = distributed.plan_shards("qwen1.5-110b", 1)
+    assert p1.memory_fraction == 1.0 and p1.bytes_per_step == 0.0
+    with pytest.raises(KeyError):
+        distributed.plan_shards("not-a-model", 4)
+    with pytest.raises(ValueError):
+        distributed.plan_shards("qwen1.5-110b", 0)
+
+
+def test_plan_for_spec_generic_fallback_for_paper_models():
+    h = Handler(name="resnet-custom", base_cpu_seconds=0.2,
+                package_mb=45.0, peak_memory_mb=100.0)
+    plan = distributed.plan_for_spec(FunctionSpec(handler=h), 4)
+    assert plan.fanout == 4
+    assert plan.memory_fraction == pytest.approx(0.25)
+    assert plan.bytes_per_step == 0.0   # no modelled comms traffic
+
+
+def test_lane_spec_shrinks_load_not_sandbox():
+    spec = _llm_spec()
+    plan = distributed.plan_for_spec(spec, 8)
+    lane = distributed.lane_spec(spec, plan)
+    h, lh = spec.handler, lane.handler
+    assert lh.name == f"{h.name}#shard8"
+    assert lh.base_cpu_seconds == pytest.approx(h.base_cpu_seconds / 8)
+    assert lh.load_cpu_seconds == pytest.approx(
+        h.load_cpu_seconds * plan.load_fraction)
+    assert lh.package_mb == pytest.approx(h.package_mb * plan.load_fraction)
+    # the sandbox itself stays full-size: memory tier, provider, bootstrap
+    assert lane.memory_mb == spec.memory_mb
+    assert lane.provider == spec.provider
+    assert lh.bootstrap_cpu_seconds == h.bootstrap_cpu_seconds
+
+
+# ------------------------------------------------- gang math (deterministic)
+def test_gang_cold_probability_identity_and_monotone():
+    for p in (0.0, 0.05, 0.2, 0.5, 1.0):
+        prev = -1.0
+        for n in (1, 2, 4, 8, 16):
+            g = distributed.gang_cold_probability(p, n)
+            assert g == pytest.approx(1.0 - (1.0 - p) ** n)
+            assert g >= prev - 1e-12      # monotone non-decreasing in n
+            prev = g
+        assert distributed.gang_cold_probability(p, 1) == pytest.approx(p)
+    with pytest.raises(ValueError):
+        distributed.gang_cold_probability(1.5, 2)
+    with pytest.raises(ValueError):
+        distributed.gang_cold_probability(0.5, 0)
+
+
+def test_comms_channel_monotone_in_bytes_and_priced():
+    ch = LAMBDA.comms_channel("storage")
+    qu = LAMBDA.comms_channel("queue")
+    assert ch.step_s(0.0) == 0.0
+    prev = 0.0
+    for nbytes in (1e3, 1e6, 1e8, 1e9):
+        s = ch.step_s(nbytes)
+        assert s >= prev
+        prev = s
+    # the queue is the low-latency / expensive-per-GB channel
+    assert qu.hop_s < ch.hop_s
+    assert qu.usd_per_gb > ch.usd_per_gb
+    assert distributed.comms_cost(2e9, ch) == pytest.approx(
+        2.0 * ch.usd_per_gb)
+    assert distributed.comms_cost(0.0, ch) == 0.0
+    with pytest.raises(KeyError):
+        LAMBDA.comms_channel("carrier-pigeon")
+
+
+def test_comms_request_time_monotone_in_fanout():
+    """More shards never shrink the modelled channel time: per-shard step
+    bytes grow with the ring factor (N-1)/N."""
+    ch = LAMBDA.comms_channel("storage")
+    prev = 0.0
+    for n in (2, 4, 8, 16):
+        plan = distributed.plan_shards("qwen1.5-110b", n)
+        s = ch.request_s(plan.step_bytes(1), 8)
+        assert s >= prev
+        prev = s
+
+
+# ------------------------------------------------------- cluster gang path
+TRACE_KW = dict(rate_rps=0.004, duration_s=6000.0)
+
+
+def test_gang_cold_rate_grows_with_fanout():
+    """The 1-(1-p)^N law in vivo: independent lane placement multiplies
+    the cold tail as the fan-out grows."""
+    spec = _llm_spec()
+    trace = poisson(seed=29, **TRACE_KW)
+    colds = {}
+    for n in (1, 4, 8):
+        sh = None if n == 1 else ShardingConfig(kind="gang", fanout=n)
+        _, recs = _run(spec, trace, sharding=sh)
+        colds[n] = _cold_count(recs)
+    assert colds[1] <= colds[4] <= colds[8]
+    assert colds[8] > colds[1]
+
+
+def test_coplacement_cold_starts_never_worse():
+    """Aggregate dominance: pinning the gang in one reclamation domain
+    (no one-sided TTL reclaim factors) never costs extra request colds on
+    the same trace."""
+    spec = _llm_spec()
+    for seed in range(4):
+        trace = poisson(seed=seed, **TRACE_KW)
+        _, ind = _run(spec, trace,
+                      sharding=ShardingConfig(kind="gang", fanout=8),
+                      seed=seed)
+        _, co = _run(spec, trace,
+                     sharding=ShardingConfig(kind="gang", fanout=8,
+                                             co_place=True),
+                     seed=seed)
+        assert _cold_count(co) <= _cold_count(ind), seed
+
+
+def test_gang_prewarm_converts_repeat_colds():
+    spec = _llm_spec()
+    trace = poisson(seed=29, **TRACE_KW)
+    cfg = ShardingConfig(kind="gang", fanout=8, co_place=True)
+    _, plain = _run(spec, trace, sharding=cfg)
+    sim, pw = _run(spec, trace,
+                   sharding=ShardingConfig(kind="gang", fanout=8,
+                                           co_place=True,
+                                           gang_prewarm=True))
+    assert _cold_count(pw) <= _cold_count(plain)
+    assert sim.prewarms > 0
+    assert sim._gang_prewarm_cost > 0           # setup ticks are billed
+
+
+def test_comms_time_and_dollars_surface():
+    """Every gang request pays the channel walk, the moved bytes match
+    the plan exactly, and the transfer dollars land in mitigation_cost."""
+    spec = _llm_spec()
+    trace = poisson(seed=29, **TRACE_KW)
+    cfg = ShardingConfig(kind="gang", fanout=8)
+    sim, recs = _run(spec, trace, sharding=cfg)
+    plan = distributed.plan_shards("qwen1.5-110b", 8)
+    ch = get_provider(spec.provider).comms_channel("storage")
+    comms_s = ch.request_s(plan.step_bytes(1), cfg.steps_per_request)
+    n = len(recs)
+    assert n == len(trace)
+    for r in recs:
+        assert r.end_s - r.start_exec_s >= comms_s - 1e-9
+        assert r.fn == spec.name            # records carry the parent fn
+        assert r.batch_size == 1
+    moved = plan.step_bytes(1) * 8 * cfg.steps_per_request * n
+    assert sim._comms_bytes == pytest.approx(moved)
+    assert sim._comms_cost == pytest.approx(
+        moved / 1e9 * ch.usd_per_gb)
+    assert sim.mitigation_cost >= sim._comms_cost
+
+
+def test_queue_channel_selected_and_faster_per_step():
+    spec = _llm_spec()
+    trace = poisson(seed=29, rate_rps=0.004, duration_s=2000.0)
+    lat = {}
+    for kind in ("storage", "queue"):
+        _, recs = _run(spec, trace,
+                       sharding=ShardingConfig(kind="gang", fanout=4,
+                                               channel=kind))
+        lat[kind] = min(r.end_s - r.start_exec_s for r in recs)
+    prof = get_provider(spec.provider)
+    plan = distributed.plan_shards("qwen1.5-110b", 4)
+    # at decode-step activation sizes the queue's cheap hops win the wall
+    # clock (its thin bandwidth only bites at much larger payloads)
+    if prof.comms_channel("queue").step_s(plan.bytes_per_step) < \
+            prof.comms_channel("storage").step_s(plan.bytes_per_step):
+        assert lat["queue"] < lat["storage"]
+
+
+def test_kind_none_is_the_unsharded_path_bit_for_bit():
+    spec = _llm_spec()
+    trace = poisson(seed=29, rate_rps=0.004, duration_s=2000.0)
+    _, plain = _run(spec, trace, sharding=None)
+    _, none_cfg = _run(spec, trace, sharding=ShardingConfig())
+    rows = lambda rs: [(r.rid, r.start_exec_s, r.end_s, r.cold, r.cost,
+                        r.container_id) for r in rs]
+    assert rows(plain) == rows(none_cfg)
+
+
+def test_gang_cold_pays_lane_setup_not_full_model():
+    """A gang-cold request's setup is one lane's (1/N of the load work),
+    visibly cheaper than the unsharded full-model cold."""
+    spec = _llm_spec()
+    trace = poisson(seed=29, rate_rps=0.004, duration_s=2000.0)
+    _, full = _run(spec, trace, sharding=None)
+    _, gang = _run(spec, trace,
+                   sharding=ShardingConfig(kind="gang", fanout=8,
+                                           co_place=True))
+    full_colds = [r.end_s - r.arrival_s for r in full if r.cold]
+    gang_colds = [r.end_s - r.arrival_s for r in gang if r.cold]
+    assert full_colds and gang_colds
+    assert max(gang_colds) < min(full_colds)
+
+
+# ------------------------------------------------ estimates / calibration
+def test_warm_exec_estimate_prefers_measured_calibration(monkeypatch):
+    spec = _llm_spec()
+    analytic = spec.handler.base_cpu_seconds
+    prof = get_provider(spec.provider)
+    monkeypatch.setattr(pol, "_MEASURED_MODELS", {})
+    assert pol.warm_exec_estimate(spec) == pytest.approx(
+        prof.exec_time(analytic, spec.memory_mb))
+    measured = {"qwen1.5-110b": {"warm_exec_s": 0.5}}
+    monkeypatch.setattr(pol, "_MEASURED_MODELS", measured)
+    assert pol.warm_exec_estimate(spec) == pytest.approx(
+        prof.exec_time(0.5, spec.memory_mb))
+    # a gang lane resolves its parent model's entry, scaled 1/N
+    plan = distributed.plan_for_spec(spec, 8)
+    lane = distributed.lane_spec(spec, plan)
+    assert pol.warm_exec_estimate(lane) == pytest.approx(
+        prof.exec_time(0.5 / 8, lane.memory_mb))
+
+
+def test_gang_join_estimate_composes_exec_and_channel(monkeypatch):
+    monkeypatch.setattr(pol, "_MEASURED_MODELS", {})
+    spec = _llm_spec()
+    plan = distributed.plan_for_spec(spec, 8)
+    ch = get_provider(spec.provider).comms_channel("storage")
+    est = distributed.gang_join_estimate(spec, plan, ch, steps=8)
+    lane = distributed.lane_spec(spec, plan)
+    assert est == pytest.approx(
+        pol.warm_exec_estimate(lane)
+        + ch.request_s(plan.step_bytes(1), 8))
+
+
+# --------------------------------------------------------- scenario verdict
+def test_sharded_110b_tiny_scale_verdict():
+    """The suite story end to end at CI scale: baseline cold rate grows
+    with the fan-out ladder, and the tuned gang stack recovers the WIN
+    against both the baseline and the pre-mitigation rival."""
+    from benchmarks.scenario_suite import run_scenario
+    from repro.core import scenarios
+    sc = scenarios.get("sharded_110b")
+    res = run_scenario(sc, scale=sc.tiny_scale)
+    rows = {key.axes_key()[-1]: row for key, row in res["rows"].items()}
+    assert set(rows) == {"-", "gang4", "gang8", "gang8+co", "gang8+co+pw"}
+    # the fan-out ladder: independent placement multiplies the cold tail
+    assert rows["-"]["cold_rate"] <= rows["gang4"]["cold_rate"] \
+        <= rows["gang8"]["cold_rate"]
+    assert rows["gang8"]["cold_rate"] > rows["-"]["cold_rate"]
+    # comms dollars surface as mitigation spend on every sharded stack
+    for name in ("gang4", "gang8", "gang8+co", "gang8+co+pw"):
+        assert rows[name]["mitigation_per_1k"] > 0, name
+    assert rows["-"]["mitigation_per_1k"] == 0
+    v = res["verdict"]
+    assert v["expected_winner"] == "sharded_gang"
+    assert v["win"], (v["baseline"], v["winner"])
+    assert v["beats_rival_cold"]
+
+
+def test_sharding_config_validation():
+    with pytest.raises(KeyError):
+        ShardingConfig(kind="mesh")
+    with pytest.raises(ValueError):
+        ShardingConfig(kind="gang", fanout=0)
+    with pytest.raises(KeyError):
+        ShardingConfig(kind="gang", channel="smoke-signals")
+    with pytest.raises(ValueError):
+        ShardingConfig(kind="none", fanout=4)   # non-default knob on none
+    st = PolicyStack(sharding={"kind": "gang", "fanout": 4})
+    assert st.sharding.fanout == 4
+    assert st.axes_key()[-1] == "gang4"
+    assert PolicyStack().axes_key()[-1] == "-"

@@ -135,3 +135,54 @@ def test_production_dryrun_artifacts_complete():
             if not os.path.exists(p):
                 missing.append((aid, sid, tag))
     assert not missing, f"missing dry-runs: {missing}"
+
+
+# ------------------------------------------------- comms_summary (DESIGN §10)
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen1.5-110b"])
+def test_comms_summary_matches_analytic_plan_subprocess(arch):
+    """The cluster simulator's analytic comms model
+    (``repro.core.distributed.plan_shards``) must stay within 10% of what
+    GSPMD actually lowers for the decode step — ``comms_summary`` compiles
+    the pair on a (1, 4) mesh and reports the per-shard link bytes.  (For
+    the dense archs the analytic model is in fact exact: two f32
+    activation all-reduces per layer + embedding, one logits all-gather.)
+    """
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, json
+from repro.launch.dryrun import comms_summary
+mesh = jax.make_mesh((1, 4), ("data", "model"))
+s = comms_summary("{arch}", "decode_32k", mesh=mesh)
+print("COMMS_JSON", json.dumps(s))
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = next(l for l in out.stdout.splitlines()
+                if l.startswith("COMMS_JSON "))
+    s = json.loads(line[len("COMMS_JSON "):])
+
+    # ---- stable schema (treat as API)
+    for key in ("arch", "shape", "kind", "mesh", "axes", "model_parallel",
+                "loop_trips", "counts", "per_kind", "per_shard_bytes",
+                "total_bytes"):
+        assert key in s, key
+    assert s["arch"] == arch
+    assert s["kind"] == "decode"
+    assert s["model_parallel"] == 4
+    assert s["per_shard_bytes"] > 0
+    assert s["total_bytes"] == pytest.approx(4 * s["per_shard_bytes"])
+    assert s["per_shard_bytes"] == pytest.approx(
+        sum(s["per_kind"].values()))
+
+    # ---- the 10% sim-vs-dryrun validation gate
+    from repro.configs.base import SHAPES
+    from repro.core.distributed import plan_shards
+    batch = SHAPES["decode_32k"].global_batch
+    plan = plan_shards(arch, 4, batch=batch)
+    analytic = plan.step_bytes(batch)
+    lowered = s["per_shard_bytes"]
+    assert abs(analytic - lowered) / lowered < 0.10, (analytic, lowered)
