@@ -3,16 +3,20 @@
 For every scenario in ``repro.core.scenarios`` this runner sweeps the full
 (placement x keepalive x scaling x coldstart x concurrency x batching)
 cross-product on the scenario's trace and fleet (scenarios that pin their
-own ``sweep_axes`` — e.g. ``sharded_110b``'s sharding fan-out ladder —
-sweep that grid instead), grades each combo against
-the scenario's SLA, and emits a per-scenario markdown + CSV report with
-cold-start rate, p50/p95/p99 latency, SLA verdicts, and cost per 1k
+own ``sweep_axes`` — e.g. ``sharded_110b``'s sharding fan-out ladder or
+``unreliable_burst``'s reliability ladder — sweep that grid instead),
+grades each combo against the scenario's SLA, and emits a per-scenario
+markdown + CSV report with cold-start rate, p50/p95/p99 latency,
+availability / mean attempts / hedge spend, SLA verdicts, and cost per 1k
 invocations (mitigation spend — snapshot storage, bare-pool idle — folded
 in and broken out).  Each scenario ends with a verdict comparing its
 ``expected_winner`` policy stack against the Lambda baseline (fixed TTL,
 implicit scaling, full colds) on cold rate and p95; scenarios with a
 ``rival`` additionally require the winner to beat that pre-mitigation
-stack on cold-start rate.
+stack on cold-start rate.  Chaos scenarios (``Scenario.faults`` set)
+grade on availability instead: the winner must meet the SLA (floor
+included) and recover strictly more availability than baseline and
+rival under identical seeded faults.
 
 ``benchmarks/policy_sweep.py`` is a thin preset of this suite (the sparse
 scenario restricted to the classic axes); its CSV output is bit-compatible
@@ -57,9 +61,10 @@ AXES = {
 }
 
 CSV_FIELDS = ("scenario", "placement", "keepalive", "scaling", "coldstart",
-              "concurrency", "batching", "sharding", "n", "cold_rate",
-              "p50_s", "p95_s", "p99_s", "cost_per_1k", "mitigation_per_1k",
-              "sla", "sla_ok", "evictions", "prewarms")
+              "concurrency", "batching", "sharding", "reliability", "n",
+              "cold_rate", "p50_s", "p95_s", "p99_s", "cost_per_1k",
+              "mitigation_per_1k", "availability", "attempts",
+              "hedge_per_1k", "sla", "sla_ok", "evictions", "prewarms")
 
 
 def run_combo(specs, trace, stack: PolicyStack, *, seed=0, sla=None,
@@ -142,20 +147,34 @@ def _grade(scenario: Scenario, fleet_names: list, n_requests: int,
     the serial and parallel paths, so their reports agree byte for byte)."""
     base = rows[POLICY_STACKS["baseline"]]
     winner = rows[POLICY_STACKS[scenario.expected_winner]]
+    faulted = scenario.faults is not None
+    if faulted:
+        # chaos scenarios grade on what reliability buys: meet the SLA
+        # (availability floor included) and recover more availability
+        # than the baseline under identical fault processes
+        win = bool(winner["sla_ok"]
+                   and winner["availability"] > base["availability"])
+    else:
+        win = (winner["cold_rate"] < base["cold_rate"]
+               and winner["p95_s"] < base["p95_s"])
     verdict = {
         "expected_winner": scenario.expected_winner,
-        "baseline": base, "winner": winner,
-        "win": (winner["cold_rate"] < base["cold_rate"]
-                and winner["p95_s"] < base["p95_s"]),
+        "baseline": base, "winner": winner, "win": win,
+        "faulted": faulted,
     }
     if scenario.rival:
         # the mitigation grade: the winner must also beat the best
-        # pre-mitigation stack on cold-start rate, not just the baseline
+        # pre-mitigation stack — on availability for chaos scenarios,
+        # on cold-start rate everywhere else
         rival = rows[POLICY_STACKS[scenario.rival]]
         verdict["rival"] = scenario.rival
         verdict["rival_row"] = rival
-        verdict["beats_rival_cold"] = \
-            winner["cold_rate"] < rival["cold_rate"]
+        if faulted:
+            verdict["beats_rival_cold"] = \
+                winner["availability"] > rival["availability"]
+        else:
+            verdict["beats_rival_cold"] = \
+                winner["cold_rate"] < rival["cold_rate"]
         verdict["win"] = bool(verdict["win"]
                               and verdict["beats_rival_cold"])
     return {"scenario": scenario.name, "description": scenario.description,
@@ -167,8 +186,8 @@ def _grade(scenario: Scenario, fleet_names: list, n_requests: int,
 
 # ------------------------------------------------------------------ reporting
 def _fmt_combo(stack: PolicyStack) -> tuple:
-    p, k, s, cs, c, b, sh = stack.axes_key()
-    return p, k, s, cs, str(c), ("y" if b else "n"), sh
+    p, k, s, cs, c, b, sh, rel = stack.axes_key()
+    return p, k, s, cs, str(c), ("y" if b else "n"), sh, rel
 
 
 def _sorted_rows(rows: dict) -> list:
@@ -188,23 +207,38 @@ def scenario_markdown(result: dict) -> str:
              f"- trace: {result['n_requests']} requests "
              f"(scale {result['scale']:g}), SLA `{result['sla']}`", "",
              "| placement | keepalive | scaling | coldstart | conc | batch "
-             "| shard | cold | p50 s | p95 s | p99 s | $/1k | mit$/1k | SLA "
-             "| evict | prewarm |",
+             "| shard | rel | cold | p50 s | p95 s | p99 s | $/1k | mit$/1k "
+             "| avail | att | SLA | evict | prewarm |",
              "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---"
-             "|---|"]
+             "|---|---|---|---|"]
     for key in _sorted_rows(result["rows"]):
         r = result["rows"][key]
-        p, k, s, cs, c, b, sh = _fmt_combo(key)
+        p, k, s, cs, c, b, sh, rel = _fmt_combo(key)
         sla_cell = ("ok" if r["sla_ok"]
                     else "FAIL " + "/".join(r["sla_violations"]))
         lines.append(
-            f"| {p} | {k} | {s} | {cs} | {c} | {b} | {sh} "
+            f"| {p} | {k} | {s} | {cs} | {c} | {b} | {sh} | {rel} "
             f"| {r['cold_rate']:.2%} "
             f"| {r['p50_s']:.3f} | {r['p95_s']:.3f} | {r['p99_s']:.3f} "
             f"| {r['cost_per_1k']:.4f} | {r['mitigation_per_1k']:.4f} "
+            f"| {r['availability']:.4f} | {r['attempts']:.2f} "
             f"| {sla_cell} | {r['evictions']} | {r['prewarms']} |")
     v = result["verdict"]
     b, w = v["baseline"], v["winner"]
+    if v.get("faulted"):
+        lines += ["",
+                  f"**Verdict** — `{v['expected_winner']}` vs `baseline` "
+                  f"under identical faults: availability "
+                  f"{b['availability']:.4f} -> {w['availability']:.4f}, "
+                  f"p95 {b['p95_s']:.3f}s -> {w['p95_s']:.3f}s, "
+                  f"$/1k {b['cost_per_1k']:.4f} -> {w['cost_per_1k']:.4f} "
+                  f"[{'WIN' if v['win'] else 'NO-WIN'}]"]
+        if "rival" in v:
+            rr = v["rival_row"]
+            lines += [f"  (reliability grade vs `{v['rival']}`: avail "
+                      f"{rr['availability']:.4f} -> {w['availability']:.4f} "
+                      f"[{'beats rival' if v['beats_rival_cold'] else 'MISSES'}])"]
+        return "\n".join(lines)
     lines += ["",
               f"**Verdict** — `{v['expected_winner']}` vs `baseline`: "
               f"cold {b['cold_rate']:.2%} -> {w['cold_rate']:.2%}, "
@@ -222,10 +256,11 @@ def scenario_markdown(result: dict) -> str:
 def suite_markdown(results: list) -> str:
     head = ["# Scenario suite report", "",
             "Policy sweep (placement x keepalive x scaling x coldstart x "
-            "concurrency x batching) per named scenario; verdicts compare "
-            "each scenario's expected-winner stack against the Lambda "
-            "baseline (and, where set, its pre-mitigation rival on cold "
-            "rate).", ""]
+            "concurrency x batching x sharding x reliability) per named "
+            "scenario; verdicts compare each scenario's expected-winner "
+            "stack against the Lambda baseline (and, where set, its "
+            "pre-mitigation rival on cold rate; chaos scenarios grade on "
+            "availability under identical faults).", ""]
     wins = sum(r["verdict"]["win"] for r in results)
     head.append(f"Scenarios: {len(results)}; expected-winner verdicts: "
                 f"{wins}/{len(results)} WIN.")
@@ -238,17 +273,21 @@ def suite_csv_rows(results: list) -> list:
     for res in results:
         for key in _sorted_rows(res["rows"]):
             r = res["rows"][key]
-            p, k, s, cs, c, b, sh = _fmt_combo(key)
+            p, k, s, cs, c, b, sh, rel = _fmt_combo(key)
             out.append({"scenario": res["scenario"], "placement": p,
                         "keepalive": k, "scaling": s, "coldstart": cs,
                         "concurrency": c,
-                        "batching": b, "sharding": sh, "n": r["n"],
+                        "batching": b, "sharding": sh, "reliability": rel,
+                        "n": r["n"],
                         "cold_rate": f"{r['cold_rate']:.6f}",
                         "p50_s": f"{r['p50_s']:.6f}",
                         "p95_s": f"{r['p95_s']:.6f}",
                         "p99_s": f"{r['p99_s']:.6f}",
                         "cost_per_1k": f"{r['cost_per_1k']:.6f}",
                         "mitigation_per_1k": f"{r['mitigation_per_1k']:.6f}",
+                        "availability": f"{r['availability']:.6f}",
+                        "attempts": f"{r['attempts']:.4f}",
+                        "hedge_per_1k": f"{r['hedge_per_1k']:.6f}",
                         "sla": r["sla"], "sla_ok": int(r["sla_ok"]),
                         "evictions": r["evictions"],
                         "prewarms": r["prewarms"]})

@@ -77,6 +77,26 @@ def sandbox_idle_cost(idle_seconds: float) -> float:
     return billed_ticks(idle_seconds) * price_per_100ms(BARE_SANDBOX_MB)
 
 
+def errored_invocation_cost(elapsed_s: float, memory_mb: int) -> float:
+    """Bill of a failed attempt that ran for ``elapsed_s`` before the
+    sandbox died or the client timed out — Lambda bills errored invokes
+    like successful ones, for the duration they actually ran (the same
+    tick arithmetic as ``invocation_cost``; named separately so the
+    reliability path's charges are auditable).  Throttled (429) attempts
+    and provision failures never start executing and cost nothing."""
+    if elapsed_s <= 0.0:
+        return 0.0
+    return billed_ticks(elapsed_s) * price_per_100ms(memory_mb)
+
+
+def hedge_waste_cost(loser_elapsed_s: float, memory_mb: int) -> float:
+    """Wasted dollars of one hedged request: the losing attempt's full
+    bill (both copies run to completion; the provider refunds nothing).
+    Identical arithmetic to ``errored_invocation_cost`` — the name keeps
+    the suite's wasted-hedge column self-describing."""
+    return errored_invocation_cost(loser_elapsed_s, memory_mb)
+
+
 def transfer_cost(bytes_total: float, usd_per_gb: float) -> float:
     """Data-transfer dollars for moving ``bytes_total`` through a
     provider-mediated comms channel (storage PUT/GET or queue messages) —

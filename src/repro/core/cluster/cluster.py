@@ -29,6 +29,7 @@ wall times land on the ``RequestRecord`` either way.
 from __future__ import annotations
 
 import gc as _gc
+from collections import deque
 from heapq import heappop, heappush
 from math import ceil as _ceil
 from typing import Optional, Union
@@ -47,6 +48,7 @@ from repro.core.cluster.policies import (ColdStartPolicy, FixedTTL, FullCold,
                                          make_scaling)
 from repro.core.cluster.router import BarePool, BatchingConfig, Fleet, Router
 from repro.core.container import Container, Phase, State
+from repro.core.faults import _SALT_BACKOFF, _u01
 from repro.core.function import FunctionSpec, Handler, batch_rel_cost
 from repro.core.workload import Request
 from repro.serving.batcher import PendingRequest
@@ -72,12 +74,37 @@ _UNSET = object()
 # and PolicyStack.from_kwargs mirror (tests pin the shim equivalence)
 AXIS_DEFAULTS = {"placement": "mru", "keepalive": None, "scaling": None,
                  "coldstart": None, "concurrency": 1, "batching": None,
-                 "max_containers": 0, "sharding": None}
+                 "max_containers": 0, "sharding": None, "reliability": None}
 _AXIS_DEFAULTS = AXIS_DEFAULTS
 # seed offset for the gang lanes' sandbox-reclaim RNG: an independent
 # stream so sharded runs never perturb the jitter draw order the parity
 # goldens pin (any fixed offset works; a prime keeps it recognizable)
 _RECLAIM_SEED_OFFSET = 104729
+# success latencies a fleet remembers for the hedge-delay estimate, and
+# the minimum history before the percentile replaces the warm-exec guess
+_HEDGE_OBS = 256
+_HEDGE_MIN_OBS = 16
+
+
+class _RelState:
+    """In-flight reliability bookkeeping for one request: every launched
+    attempt's billed cost (``pending`` until the attempt resolves), the
+    accumulated bill, and the retry/hedge scheduling flags.  Lives in
+    ``ClusterSimulator._rel`` from first dispatch to final record."""
+
+    __slots__ = ("req", "fname", "attempts", "pending", "cost", "done",
+                 "prev_delay", "retry_pending", "hedged")
+
+    def __init__(self, req, fname: str):
+        self.req = req
+        self.fname = fname          # serving fleet (degrade may reroute)
+        self.attempts = 0           # attempts launched so far
+        self.pending = {}           # attempt index -> its billed cost
+        self.cost = 0.0             # total billed across attempts
+        self.done = False           # a record has been written
+        self.prev_delay = 0.0       # decorrelated-jitter backoff memory
+        self.retry_pending = False  # a RETRY event is in the heap
+        self.hedged = False         # the speculative duplicate is armed
 
 
 class ClusterSimulator:
@@ -115,11 +142,14 @@ class ClusterSimulator:
                  seed: int = 0,
                  jitter: float = 0.03, max_containers=_UNSET,
                  concurrency=_UNSET, contention: float = 0.3,
-                 batching=_UNSET, sharding=_UNSET, record_sink=None):
+                 batching=_UNSET, sharding=_UNSET, reliability=_UNSET,
+                 faults=None, max_requeue_rounds: int = 1000,
+                 record_sink=None):
         axes = {"placement": placement, "keepalive": keepalive,
                 "scaling": scaling, "coldstart": coldstart,
                 "concurrency": concurrency, "batching": batching,
-                "max_containers": max_containers, "sharding": sharding}
+                "max_containers": max_containers, "sharding": sharding,
+                "reliability": reliability}
         if stack is not None:
             if keepalive_s is not None:
                 # keepalive_s is not one of the stack's axes, so it would
@@ -149,6 +179,7 @@ class ClusterSimulator:
         batching = axes["batching"]
         max_containers = axes["max_containers"]
         sharding = axes["sharding"]
+        reliability = axes["reliability"]
         self.stack = stack
         if isinstance(specs, FunctionSpec):
             specs = {specs.name: specs}
@@ -206,6 +237,33 @@ class ClusterSimulator:
         else:
             self._evfleets = fleets
 
+        # ---- reliability axis + fault injection (DESIGN.md §11) --------
+        # A normalized ReliabilityConfig (kind "none" flattens to None via
+        # materialize(), the fast-path gate key) and a built FaultModel
+        # (an all-zeros FaultConfig flattens to None the same way).
+        if reliability is not None and hasattr(reliability, "materialize"):
+            reliability = reliability.materialize()
+        self.reliability = reliability
+        if faults is not None and hasattr(faults, "build"):
+            faults = faults.build()
+        self.faults = faults
+        self._rel_path = reliability is not None or faults is not None
+        if self._rel_path and any(b is not None
+                                  for b in batch_by_fleet.values()):
+            raise ValueError(
+                "batching cannot be combined with reliability= or faults= "
+                "(a formed batch has no per-request attempt identity); "
+                "drop one of the two axes")
+        self._rel: dict[int, _RelState] = {}   # rid -> in-flight state
+        self._recent_fails: deque = deque()    # failure times (shed window)
+        self._lat_obs: dict[str, deque] = {}   # fleet -> success latencies
+        # capacity-requeue starvation cap: after this many REQUEUE /
+        # BATCH_RETRY rounds a request stops waiting and cold-starts past
+        # the shared cap (the bounded-starvation guarantee); the surviving
+        # round count lands on the record's ``requeues`` field
+        self.max_requeue_rounds = int(max_requeue_rounds)
+        self._requeue_rounds: dict[int, int] = {}
+
         self.placement: PlacementPolicy = make_placement(placement)
         self.keepalive: KeepalivePolicy = make_keepalive(
             keepalive, 480.0 if keepalive_s is None else keepalive_s)
@@ -260,7 +318,7 @@ class ClusterSimulator:
                       and not self._lazy_evict and not self._track_arrivals
                       and not self._phased and self.concurrency == 1
                       and not self.max_containers and self.pool is None
-                      and self.sharding is None
+                      and self.sharding is None and not self._rel_path
                       and all(f.batcher is None for f in fleets.values())
                       # bill-idle (GPU serverless) fleets need per-eviction
                       # up-time accounting the fused loops skip
@@ -556,6 +614,9 @@ class ClusterSimulator:
         COMPLETE, EXPIRE, ARRIVAL = ev.COMPLETE, ev.EXPIRE, ev.ARRIVAL
         PREWARM_READY, FLUSH, PHASE_DONE = (ev.PREWARM_READY, ev.FLUSH,
                                             ev.PHASE_DONE)
+        FAULT, RETRY, HEDGE_FIRE, ATTEMPT_DONE = (ev.FAULT, ev.RETRY,
+                                                  ev.HEDGE_FIRE,
+                                                  ev.ATTEMPT_DONE)
         events = self.events
         t = 0.0
         while True:
@@ -587,6 +648,14 @@ class ClusterSimulator:
             elif kind == BATCH_RETRY:
                 fname, reqs = item[3]
                 self._dispatch(q, self._fleets[fname], t, reqs)
+            elif kind == FAULT:
+                self._on_fault(q, t, item[3])
+            elif kind == RETRY:
+                self._on_retry(q, t, item[3])
+            elif kind == HEDGE_FIRE:
+                self._on_hedge_fire(q, t, item[3])
+            elif kind == ATTEMPT_DONE:
+                self._on_attempt_done(q, t, item[3])
             else:  # ARRIVAL / REQUEUE
                 on_arrival(q, t, item[3], kind == ARRIVAL)
         self.events = events
@@ -772,7 +841,8 @@ class ClusterSimulator:
                     row_sink((req.rid, ta, start, end, cold, exec_s,
                               exec_s, ticks * fleet.price_100ms, c.cid,
                               fleet.memory_mb, req.tag, fleet.name, 1,
-                              kind_s, prov, boot, load, 0.0))
+                              kind_s, prov, boot, load, 0.0,
+                              True, 1, 0.0, 0))
                     if tag_sink is not None:
                         tag_sink(req.tag)
                     continue
@@ -990,7 +1060,8 @@ class ClusterSimulator:
                     ticks = 1
                 row_sink((req.rid, t_arr, start, end, cold, exec_s,
                           exec_s, ticks * price, cid, mem, req.tag,
-                          fname, 1, kind_s, prov, boot, load, 0.0))
+                          fname, 1, kind_s, prov, boot, load, 0.0,
+                          True, 1, 0.0, 0))
                 if tag_sink is not None:
                     tag_sink(req.tag)
                 continue
@@ -1175,6 +1246,9 @@ class ClusterSimulator:
                 self._schedule_flush(q, fleet)
             return
 
+        if self._rel_path:
+            self._dispatch_reliable(q, fleet, t, req)
+            return
         self._dispatch(q, fleet, t, (req,))
 
     # ---------------------------------------------------------------- flush
@@ -1244,7 +1318,7 @@ class ClusterSimulator:
         self._gang_prewarm_cost += ticks * lane.price_100ms
 
     def _dispatch_gang(self, q: EventQueue, fleet: Fleet, t: float,
-                       reqs: list) -> None:
+                       reqs: list, base_attempts: int = 1) -> None:
         """One logical request fans out to ``fleet``'s gang: every lane
         (shard sandbox fleet) serves a sub-invoke, and the request joins
         on the slowest lane plus the decode steps' channel time.  The
@@ -1252,6 +1326,15 @@ class ClusterSimulator:
         multiplication — and its bill is the sum of the lanes' exec ticks
         plus the per-GB activation transfer (billed into
         ``mitigation_cost`` by ``_finalize``).
+
+        Under an active fault model each lane additionally draws per-lane
+        crash fates (1-(1-p)^N multiplies the failure tail like the cold
+        tail); a crashed lane bills its elapsed work and — within the
+        reliability axis's ``max_attempts`` budget — retries after a
+        decorrelated-jitter backoff with a fresh sandbox setup.  A lane
+        that faults past the budget fails the whole gang request
+        (``ok=False``).  ``base_attempts`` counts gang-level attempts
+        already spent upstream (storm-throttle retries).
         """
         sh = self.sharding
         lanes = self._gang[fleet.name]
@@ -1266,6 +1349,14 @@ class ClusterSimulator:
                 bmul = 1.0 + fleet.batching.amortization * (b - 1)
         heap, seq = q._heap, q._seq
         ttl = self._ttl_for(fleet.name)
+        fm = self.faults
+        rel = self.reliability
+        rel_max = rel.max_attempts if rel is not None else 1
+        rel_base = rel.backoff_base_s if rel is not None else 0.2
+        rel_cap = rel.backoff_cap_s if rel is not None else 5.0
+        rid0 = reqs[0].rid
+        gang_ok = True
+        max_lane_att = 1
         any_cold = False
         cold_kind = ""
         start_max = t           # all shards ready: the gang's exec begin
@@ -1273,7 +1364,7 @@ class ClusterSimulator:
         crit_cid = -1
         crit_walls = (0.0, 0.0, 0.0, 0.0)
         cost = 0.0              # per-request exec $ summed over lanes
-        for lane in lanes:
+        for lane_i, lane in enumerate(lanes):
             if lane.idle_stale:
                 lane.prune_idle()
             idle = lane.idle
@@ -1321,7 +1412,35 @@ class ClusterSimulator:
             else:
                 ra = c.ready_at
                 start = t if t >= ra else ra
-            end = start + exec_s + _NET_S
+            # ---- lane faults: mid-exec crashes retried within the
+            # reliability budget.  Retries reuse the already-drawn exec
+            # value and a nominal fresh setup (no extra main-RNG draws, so
+            # fault fates stay identical across policy stacks); the
+            # crashed elapsed work bills like any errored invoke.
+            lane_extra = 0.0
+            if fm is not None:
+                lane_att = 1
+                prev_d = rel_base
+                cf = fm.lane_crash_frac(rid0, lane_att, lane_i)
+                while cf is not None:
+                    crashed = exec_s * cf
+                    cost += billing.errored_invocation_cost(
+                        crashed / b, lane.memory_mb)
+                    if lane_att >= rel_max:
+                        gang_ok = False
+                        lane_extra += crashed
+                        break
+                    u = fm.backoff_u(rid0, lane_att)
+                    delay = min(rel_cap,
+                                rel_base + (3.0 * prev_d - rel_base) * u)
+                    prev_d = delay
+                    # the dead sandbox is replaced: pay a full cold setup
+                    lane_extra += crashed + delay + lane.cold_total_s
+                    lane_att += 1
+                    cf = fm.lane_crash_frac(rid0, lane_att, lane_i)
+                if lane_att > max_lane_att:
+                    max_lane_att = lane_att
+            end = start + lane_extra + exec_s + _NET_S
             c.state = State.BUSY
             if end > c.last_used_at:
                 c.last_used_at = end
@@ -1368,18 +1487,20 @@ class ClusterSimulator:
                                                              0.0, 0.0)
         append_row = self.records.append_row
         share = wall / b
+        n_att = base_attempts + max_lane_att - 1
         if b == 1:
             req = reqs[0]
             append_row((req.rid, req.arrival_s, start_max, end, any_cold,
                         wall, wall, cost, crit_cid, fleet.memory_mb,
                         req.tag, fleet.name, 1, cold_kind, prov, boot,
-                        load, rest))
+                        load, rest, gang_ok, n_att, 0.0, 0))
         else:
             for req in reqs:
                 append_row((req.rid, req.arrival_s, start_max, end,
                             any_cold, wall, share, cost, crit_cid,
                             fleet.memory_mb, req.tag, fleet.name, b,
-                            cold_kind, prov, boot, load, rest))
+                            cold_kind, prov, boot, load, rest, gang_ok,
+                            n_att, 0.0, 0))
 
     def _dispatch(self, q: EventQueue, fleet: Fleet, t: float,
                   reqs: list) -> None:
@@ -1515,16 +1636,19 @@ class ClusterSimulator:
             fleet.billed_cost += cost * b
         mem = fleet.spec.memory_mb
         append_row = self.records.append_row
+        rq = (self._requeue_rounds.pop(reqs[0].rid, 0)
+              if self._requeue_rounds else 0)
         if b == 1:
             req = reqs[0]
             append_row((req.rid, req.arrival_s, start, end, cold, exec_s,
                         exec_s, cost, ccid, mem, req.tag, fname, 1, kind,
-                        prov, boot, load, rest))
+                        prov, boot, load, rest, True, 1, 0.0, rq))
         else:
             for req in reqs:
                 append_row((req.rid, req.arrival_s, start, end, cold,
                             exec_s, share, cost, ccid, mem, req.tag, fname,
-                            b, kind, prov, boot, load, rest))
+                            b, kind, prov, boot, load, rest, True, 1, 0.0,
+                            rq))
 
     # ------------------------------------------------------------ throttling
     def _make_room(self, q: EventQueue, fleet: Fleet, t: float,
@@ -1536,8 +1660,7 @@ class ClusterSimulator:
         Returns True when the caller may proceed with a cold start."""
         until = fleet.earliest_free_s()
         if until is not None:
-            self._requeue(q, fleet, until, reqs)
-            return False
+            return not self._requeue_capped(q, fleet, until, reqs)
         victims = [(f.containers[cid].last_used_at, cid, f)
                    for f in self.fleets.values() if f is not fleet
                    for cid in f.live if f.containers[cid].state == State.WARM]
@@ -1548,9 +1671,26 @@ class ClusterSimulator:
         ends = [f.earliest_free_s() for f in self.fleets.values()]
         ends = [e for e in ends if e is not None]
         if ends:
-            self._requeue(q, fleet, min(ends), reqs)
-            return False
+            return not self._requeue_capped(q, fleet, min(ends), reqs)
         return True   # nothing to wait for: exceed the cap rather than drop
+
+    def _requeue_capped(self, q: EventQueue, fleet: Fleet, until: float,
+                        reqs: list) -> bool:
+        """Requeue ``reqs`` and return True — unless the work has already
+        waited ``max_requeue_rounds`` rounds, in which case return False
+        and let the caller cold-start past the shared cap.  The bound
+        turns the REQUEUE/BATCH_RETRY loop from potentially unbounded
+        (a saturated cluster can starve one request indefinitely) into a
+        hard guarantee; the per-request round count survives onto the
+        record's ``requeues`` field (batch members share the head's
+        count)."""
+        rid = reqs[0].rid
+        n = self._requeue_rounds.get(rid, 0) + 1
+        if n > self.max_requeue_rounds:
+            return False
+        self._requeue_rounds[rid] = n
+        self._requeue(q, fleet, until, reqs)
+        return True
 
     def _requeue(self, q: EventQueue, fleet: Fleet, until: float,
                  reqs: list) -> None:
@@ -1562,3 +1702,379 @@ class ClusterSimulator:
         else:
             for req in reqs:
                 q.push(until, REQUEUE, req)
+
+    # ---------------------------------------------- reliability dispatch
+    # The attempt machine (DESIGN.md §11).  One resolution event per
+    # attempt, outcome decided at dispatch time from the fault model's
+    # counter-based fates:
+    #
+    #   success        COMPLETE@end frees the container, ATTEMPT_DONE@end
+    #                  (pushed after, same timestamp -> pops after) writes
+    #                  the record; billed in full.
+    #   crash          FAULT@crash_t evicts the sandbox and resolves;
+    #                  the elapsed exec is billed (Lambda bills errored
+    #                  invokes).
+    #   timeout        the sandbox completes (and bills) normally, but
+    #                  FAULT@t+timeout_s with cid=-1 (no evict) resolves
+    #                  the attempt as failed — the client gave up.
+    #   provision fail FAULT@t+detect evicts the half-built sandbox;
+    #                  nothing is billed (the provider ate the host).
+    #   throttle/cap   resolved inline — nothing started, nothing billed;
+    #                  RETRY@t+backoff or final failure.
+    #
+    # Every attempt's bill lands on the request state at dispatch, so the
+    # winner's record carries the complete cost; duplicates still in
+    # flight at the winning completion are classified as hedge waste.
+
+    def _storm_pressure(self, t: float) -> int:
+        """Failures observed within the shed window ending at ``t``."""
+        rel = self.reliability
+        window = rel.shed_window_s if rel is not None else 30.0
+        fails = self._recent_fails
+        cutoff = t - window
+        while fails and fails[0] < cutoff:
+            fails.popleft()
+        return len(fails)
+
+    def _note_failure(self, t: float) -> None:
+        self._recent_fails.append(t)
+
+    def _backoff_delay(self, st: _RelState) -> float:
+        """Exponential backoff with decorrelated jitter:
+        ``min(cap, uniform(base, 3 * prev))`` — the uniform comes from the
+        fault hash keyed by (rid, attempt), never the main jitter RNG."""
+        rel = self.reliability
+        base = rel.backoff_base_s
+        fm = self.faults
+        u = (fm.backoff_u(st.req.rid, st.attempts) if fm is not None
+             else _u01(0, st.req.rid, st.attempts, _SALT_BACKOFF))
+        prev = st.prev_delay if st.prev_delay > 0.0 else base
+        delay = min(rel.backoff_cap_s, base + (3.0 * prev - base) * u)
+        st.prev_delay = delay
+        return delay
+
+    def _observe_latency(self, fname: str, lat: float) -> None:
+        obs = self._lat_obs.get(fname)
+        if obs is None:
+            obs = self._lat_obs[fname] = deque(maxlen=_HEDGE_OBS)
+        obs.append(lat)
+
+    def _hedge_delay(self, fleet: Fleet) -> float:
+        """When to fire the speculative duplicate: the fleet's observed
+        p-``hedge_quantile`` attempt latency once enough history exists,
+        else a warm-exec multiple; ``hedge_min_s`` floors both."""
+        rel = self.reliability
+        obs = self._lat_obs.get(fleet.name)
+        if obs is not None and len(obs) >= _HEDGE_MIN_OBS:
+            arr = np.fromiter(obs, dtype=float, count=len(obs))
+            d = float(np.percentile(arr, rel.hedge_quantile * 100.0))
+        else:
+            d = 3.0 * fleet.warm_exec_s
+        return max(d, rel.hedge_min_s)
+
+    def _dispatch_reliable(self, q: EventQueue, fleet: Fleet, t: float,
+                           req: Request) -> None:
+        """Entry point for every arrival while reliability and/or faults
+        are active (the general loop only; the fused fast loops gate
+        themselves off)."""
+        rel = self.reliability
+        st = self._rel.get(req.rid)
+        if st is None:
+            if rel is not None and rel.kind == "degrade" and \
+                    self._storm_pressure(t) >= rel.shed_threshold:
+                if rel.degrade_to:
+                    df = self._fleets.get(rel.degrade_to)
+                    if df is not None:
+                        fleet = df    # failure storm: serve degraded
+                else:
+                    # pure load-shed: fail fast, bill nothing
+                    st = _RelState(req, fleet.name)
+                    self._fail_request(t, st)
+                    return
+            st = _RelState(req, fleet.name)
+            self._rel[req.rid] = st
+        if self.sharding is not None:
+            # gang fan-out: storms throttle the whole gang dispatch here;
+            # per-lane crash fates are drawn inside _dispatch_gang
+            attempt = st.attempts
+            st.attempts += 1
+            fm = self.faults
+            if fm is not None and fm.throttled(t, req.rid, attempt):
+                self._attempt_failed(q, t, st)
+                return
+            n_att = st.attempts
+            self._rel.pop(req.rid, None)
+            self._dispatch_gang(q, fleet, t, (req,), base_attempts=n_att)
+            return
+        self._start_attempt(q, t, st)
+
+    def _start_attempt(self, q: EventQueue, t: float,
+                       st: _RelState) -> None:
+        rel = self.reliability
+        fm = self.faults
+        fleet = self._fleets[st.fname]
+        req = st.req
+        rid = req.rid
+        attempt = st.attempts
+        st.attempts += 1
+        st.retry_pending = False
+        # ---- throttle storm / shared cap: nothing starts, nothing bills.
+        # The designated degrade fleet is exempt: it models a fallback in
+        # a different resource class (smaller tier / other region), which
+        # is what routing around a capacity storm means.
+        storm_exempt = (rel is not None and rel.degrade_to != "" and
+                        st.fname == rel.degrade_to)
+        if fm is not None and not storm_exempt and \
+                fm.throttled(t, rid, attempt):
+            self._attempt_failed(q, t, st)
+            return
+        # ---- arm the hedge on the primary attempt (fires only if the
+        # request is still unresolved when the delay elapses)
+        if rel is not None and attempt == 0 and not st.hedged and \
+                rel.kind in ("hedge", "degrade") and rel.max_attempts > 1:
+            st.hedged = True
+            q.push(t + self._hedge_delay(fleet), ev.HEDGE_FIRE, rid)
+        # ---- placement (the _dispatch logic for one request, with the
+        # shared-cap wait replaced by throttle-style backoff — a full
+        # cluster refuses like a 429 instead of parking the arrival)
+        concurrency = self.concurrency
+        if concurrency > 1 or self.placement.needs_inflight:
+            inflight = {cid: fleet.inflight(cid) for cid in fleet.live}
+        else:
+            inflight = _EMPTY
+        cands = self._candidates(fleet, t)
+        chosen: Optional[Container] = None
+        cold = claimed = False
+        if not cands:
+            cid = None
+        elif self._mru:
+            cid = max(cands)[1]
+        else:
+            cid = self.placement.choose(cands, inflight)
+        if cid is not None:
+            chosen = fleet.containers[cid]
+            idle = fleet.idle
+            for j, entry in enumerate(idle):
+                if entry[1] == cid:
+                    del idle[j]
+                    break
+        else:
+            if self.max_containers and \
+                    self._active_n >= self.max_containers:
+                self._attempt_failed(q, t, st)     # capacity 429
+                return
+            chosen = self.pool.claim(t) if self.pool is not None else None
+            if chosen is not None:
+                claimed = True
+                chosen.spec = fleet.spec
+                chosen.role = "dispatch"
+            else:
+                cold = True
+                chosen = Container(fleet.spec, created_at=t)
+                fleet.cold_starts += 1
+            self._add_container(fleet, chosen)
+        ccid = chosen.cid
+        fname = st.fname
+        # ---- provision failure: the sandbox never becomes ready; the
+        # client notices a fraction into the nominal setup.  Unbilled.
+        if cold and fm is not None and fm.provision_fails(rid, attempt):
+            detect = fleet.cold_total_s * \
+                fm.provision_detect_frac(rid, attempt)
+            chosen.state = State.BUSY     # not placeable while half-built
+            q.push(t + detect, ev.FAULT, (fname, ccid, rid, attempt))
+            return
+        # ---- timing: exec draw first, then cold-setup draw (the general
+        # loop's RNG discipline; fault fates never touch this stream)
+        exec_s = self._jit(fleet.warm_exec_s)
+        if concurrency > 1:
+            k = fleet.inflight(ccid) + 1
+            if k > 1:
+                exec_s *= 1.0 + self.contention * (k - 1)
+        prov = boot = load = rest = 0.0
+        kind = ""
+        if cold or claimed:
+            if not self._phased:
+                bd = fleet.cold_bd
+                total = fleet.cold_total_s
+                setup = self._jit(total)
+                factor = setup / total if total > 0 else 0.0
+                prov = bd.provision_s * factor
+                boot = bd.bootstrap_s * factor
+                load = setup - prov - boot
+                chosen.mark_done(Phase.PROVISION, prov)
+                chosen.mark_done(Phase.BOOTSTRAP, boot)
+                chosen.mark_done(Phase.LOAD, load)
+                kind = "full"
+            else:
+                setup, walls = self._cold_setup(q, fleet, chosen, t)
+                prov = walls.get(Phase.PROVISION, 0.0)
+                boot = walls.get(Phase.BOOTSTRAP, 0.0)
+                load = walls.get(Phase.LOAD, 0.0)
+                rest = walls.get(Phase.RESTORE, 0.0)
+                kind = self._cold_kind(walls)
+            start = t + setup
+            chosen.ready_at = start
+            if claimed:
+                self._spawn_pool_sandbox(q, t)
+        else:
+            ra = chosen.ready_at
+            start = t if t >= ra else ra
+        mem = fleet.spec.memory_mb
+        # ---- mid-execution crash: the sandbox dies partway; the elapsed
+        # work is billed (Lambda bills errored invokes) and FAULT evicts
+        crash_f = fm.crash_frac(rid, attempt) if fm is not None else None
+        if crash_f is not None:
+            elapsed = exec_s * crash_f
+            crash_t = start + elapsed
+            cost = billing.errored_invocation_cost(elapsed, mem)
+            st.cost += cost
+            st.pending[attempt] = cost
+            if fleet.bill_idle:
+                fleet.billed_cost += cost
+            chosen.state = State.BUSY
+            if crash_t > chosen.last_used_at:
+                chosen.last_used_at = crash_t
+            chosen.invocations += 1
+            q.push(crash_t, ev.FAULT, (fname, ccid, rid, attempt))
+            return
+        # ---- the attempt runs to completion: bill + schedule, exactly
+        # as _dispatch does for b == 1
+        end = start + exec_s + _NET_S
+        ticks = _ceil(exec_s / _TICK_S)
+        if ticks < 1:
+            ticks = 1
+        cost = ticks * fleet.price_100ms
+        st.cost += cost
+        st.pending[attempt] = cost
+        if fleet.bill_idle:
+            fleet.billed_cost += cost
+        chosen.state = State.BUSY
+        if end > chosen.last_used_at:
+            chosen.last_used_at = end
+        chosen.invocations += 1
+        ends = fleet.inflight_ends.get(ccid)
+        if ends is None:
+            ends = fleet.inflight_ends[ccid] = []
+        ends.append(end)
+        heap, seq = q._heap, q._seq
+        heappush(heap, (end, next(seq), ev.COMPLETE, (fname, ccid, end)))
+        ttl = self._ttl_const
+        if ttl is None:
+            ttl = self.keepalive.ttl(fname)
+        deadline = end + ttl
+        if deadline > fleet.expire_sched.get(ccid, _NEG_INF):
+            fleet.expire_sched[ccid] = deadline
+            heappush(heap, (deadline, next(seq), ev.EXPIRE, (fname, ccid)))
+        # ---- client-side timeout beats the completion?  The sandbox
+        # still finishes (and bills) — only the client walks away.
+        if rel is not None and rel.timeout_s > 0.0 and \
+                end - t > rel.timeout_s:
+            q.push(t + rel.timeout_s, ev.FAULT, (fname, -1, rid, attempt))
+            return
+        q.push(end, ev.ATTEMPT_DONE,
+               (rid, attempt, start, end, cold or claimed, exec_s, ccid,
+                kind, prov, boot, load, rest, t))
+
+    def _attempt_failed(self, q: EventQueue, t: float,
+                        st: _RelState) -> None:
+        """One attempt is dead and already unbooked; retry within budget,
+        else fail the request once no sibling attempt can still win."""
+        self._note_failure(t)
+        rel = self.reliability
+        if st.done:
+            return
+        if rel is not None and st.attempts < rel.max_attempts and \
+                not st.retry_pending:
+            st.retry_pending = True
+            q.push(t + self._backoff_delay(st), ev.RETRY, st.req.rid)
+        elif not st.pending and not st.retry_pending:
+            self._fail_request(t, st)
+
+    def _fail_request(self, t: float, st: _RelState) -> None:
+        """Out of budget: write the failure record — ``ok=False``, zero
+        useful work, ``end_s`` = the give-up time, ``cost`` = every dollar
+        burned trying."""
+        st.done = True
+        fleet = self._fleets[st.fname]
+        req = st.req
+        self.records.append_row((req.rid, req.arrival_s, t, t, False, 0.0,
+                                 0.0, st.cost, -1, fleet.memory_mb,
+                                 req.tag, st.fname, 1, "", 0.0, 0.0, 0.0,
+                                 0.0, False, st.attempts, 0.0, 0))
+        self._rel.pop(req.rid, None)
+
+    def _rel_release(self, st: _RelState) -> None:
+        """Drop the request state once resolved and no attempt is still in
+        flight (late losers need it to classify their resolution)."""
+        if st.done and not st.pending and not st.retry_pending:
+            self._rel.pop(st.req.rid, None)
+
+    def _on_fault(self, q: EventQueue, t: float, payload) -> None:
+        fname, cid, rid, attempt = payload
+        if cid >= 0:
+            fleet = self._evfleets[fname]
+            c = fleet.containers.get(cid)
+            if c is not None and c.state is not State.EVICTED:
+                self._evict(fleet, cid, t)
+        st = self._rel.get(rid)
+        if st is None:
+            return
+        st.pending.pop(attempt, None)
+        if st.done:
+            self._rel_release(st)
+            return
+        self._attempt_failed(q, t, st)
+
+    def _on_retry(self, q: EventQueue, t: float, rid: int) -> None:
+        st = self._rel.get(rid)
+        if st is None or st.done:
+            return
+        if self.sharding is not None:
+            # gang storm retry: redispatch the whole fan-out
+            fleet = self._fleets[st.fname]
+            st.retry_pending = False
+            self._dispatch_reliable(q, fleet, t, st.req)
+            return
+        rel = self.reliability
+        if rel is not None and rel.kind == "degrade" and rel.degrade_to and \
+                st.fname != rel.degrade_to and \
+                rel.degrade_to in self._fleets and \
+                self._storm_pressure(t) >= rel.shed_threshold:
+            # mid-storm retry: the shed signal tripped after this request's
+            # first attempt — reroute the retry to the fallback fleet
+            # instead of burning the rest of the budget against the storm
+            st.fname = rel.degrade_to
+        self._start_attempt(q, t, st)
+
+    def _on_hedge_fire(self, q: EventQueue, t: float, rid: int) -> None:
+        st = self._rel.get(rid)
+        rel = self.reliability
+        if st is None or st.done or rel is None or \
+                st.attempts >= rel.max_attempts:
+            return
+        self._start_attempt(q, t, st)
+
+    def _on_attempt_done(self, q: EventQueue, t: float, payload) -> None:
+        (rid, attempt, start, end, cold, exec_s, ccid, kind, prov, boot,
+         load, rest, t0) = payload
+        st = self._rel.get(rid)
+        if st is None:
+            return
+        st.pending.pop(attempt, None)
+        if st.done:
+            # a losing duplicate finishing after the winner: its cost is
+            # already on the record (billed at dispatch) — just release
+            self._rel_release(st)
+            return
+        st.done = True
+        # duplicates still in flight at the win are pure hedge waste
+        hedge_cost = sum(st.pending.values())
+        self._observe_latency(st.fname, end - t0)
+        fleet = self._fleets[st.fname]
+        req = st.req
+        self.records.append_row((rid, req.arrival_s, start, end, cold,
+                                 exec_s, exec_s, st.cost, ccid,
+                                 fleet.memory_mb, req.tag, st.fname, 1,
+                                 kind, prov, boot, load, rest, True,
+                                 st.attempts, hedge_cost, 0))
+        self._rel_release(st)

@@ -41,6 +41,10 @@ FLUSH = 4          # a batching fleet's max_wait deadline
 PHASE_DONE = 5     # a container finishes one cold-start phase
 REQUEUE = 6        # throttled arrival re-entering the loop
 BATCH_RETRY = 7    # throttled formed batch retrying as a unit
+FAULT = 8          # an attempt dies (provision fail / crash / timeout)
+RETRY = 9          # a failed attempt's backoff expires; redispatch
+HEDGE_FIRE = 10    # hedge delay elapsed; fire the speculative duplicate
+ATTEMPT_DONE = 11  # an attempt completes; resolve the request
 
 
 class EventQueue:
@@ -86,6 +90,14 @@ class RequestRecord:
     starts (``cold=True``); ``"pool"`` (bare-sandbox claim: LOAD only) is
     a PREWARM start in the OpenWhisk taxonomy, so ``cold=False`` even
     though ``load_s > 0``; ``""`` means a fully warm start.
+
+    Reliability fields (appended, defaulted — rows from faultless runs
+    are unchanged): ``ok`` is False when the request failed past its
+    retry budget (``end_s`` is then the give-up time and ``cost`` the
+    dollars burned trying); ``attempts`` counts dispatched attempts
+    including the hedge; ``hedge_cost`` is the losing duplicate's bill
+    (wasted dollars, already included in ``cost``); ``requeues`` counts
+    capacity-throttle requeue rounds the request survived.
     """
     rid: int
     arrival_s: float
@@ -105,6 +117,10 @@ class RequestRecord:
     bootstrap_s: float = 0.0
     load_s: float = 0.0
     restore_s: float = 0.0
+    ok: bool = True
+    attempts: int = 1
+    hedge_cost: float = 0.0
+    requeues: int = 0
 
     @property
     def response_s(self) -> float:

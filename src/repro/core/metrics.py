@@ -130,7 +130,8 @@ class _FoldGroup:
     for means and CIs, the max, and a latency ``QuantileSketch``."""
 
     __slots__ = ("n", "n_cold", "lat_sum", "lat_sumsq", "pred_sum",
-                 "pred_sumsq", "cost_sum", "lat_max", "sketch")
+                 "pred_sumsq", "cost_sum", "lat_max", "sketch", "ok_n",
+                 "attempts_sum", "hedge_sum")
 
     def __init__(self, alpha: float = 0.001):
         self.n = 0
@@ -142,9 +143,16 @@ class _FoldGroup:
         self.cost_sum = 0.0
         self.lat_max = -math.inf
         self.sketch = QuantileSketch(alpha)
+        # reliability aggregates (PR 10): fair-weather runs fold ok=None
+        # and these stay at their all-ok identities
+        self.ok_n = 0
+        self.attempts_sum = 0.0
+        self.hedge_sum = 0.0
 
     def fold(self, lat: np.ndarray, pred: np.ndarray, cost: np.ndarray,
-             n_cold: int) -> None:
+             n_cold: int, ok: np.ndarray | None = None,
+             attempts: np.ndarray | None = None,
+             hedge: np.ndarray | None = None) -> None:
         if lat.size == 0:
             return
         self.n += int(lat.size)
@@ -158,6 +166,11 @@ class _FoldGroup:
         if m > self.lat_max:
             self.lat_max = m
         self.sketch.update(lat)
+        self.ok_n += int(lat.size) if ok is None else int(ok.sum())
+        self.attempts_sum += (float(lat.size) if attempts is None
+                              else float(attempts.sum()))
+        if hedge is not None:
+            self.hedge_sum += float(hedge.sum())
 
     @staticmethod
     def _ci95_from_moments(n: int, s: float, ss: float) -> float:
@@ -182,7 +195,10 @@ class _FoldGroup:
             ci95_prediction_s=self._ci95_from_moments(n, self.pred_sum,
                                                       self.pred_sumsq),
             p50_s=p50, p95_s=p95, p99_s=p99, max_s=self.lat_max,
-            total_cost=self.cost_sum, mean_cost=self.cost_sum / n)
+            total_cost=self.cost_sum, mean_cost=self.cost_sum / n,
+            n_failed=n - self.ok_n, availability=self.ok_n / n,
+            mean_attempts=self.attempts_sum / n,
+            hedge_cost=self.hedge_sum)
 
 
 class RecordFold:
@@ -203,8 +219,9 @@ class RecordFold:
 
     _PHASES = ("provision_s", "bootstrap_s", "load_s", "restore_s")
 
-    __slots__ = ("drop_tags", "kept", "warm", "cold", "all_n", "all_sketch",
-                 "phase_n", "phase_sums", "by_kind", "container_spans")
+    __slots__ = ("drop_tags", "kept", "warm", "cold", "all_n", "all_ok_n",
+                 "all_sketch", "phase_n", "phase_sums", "by_kind",
+                 "container_spans")
 
     def __init__(self, drop_tags: tuple = ("prime",),
                  alpha: float = 0.001):
@@ -214,6 +231,7 @@ class RecordFold:
         self.cold = _FoldGroup(alpha)
         # the unfiltered view (SLA evaluation does not drop tags)
         self.all_n = 0
+        self.all_ok_n = 0
         self.all_sketch = QuantileSketch(alpha)
         self.phase_n = 0
         self.phase_sums = dict.fromkeys(self._PHASES, 0.0)
@@ -227,20 +245,28 @@ class RecordFold:
         lat = chunk.response_s()
         pred = chunk.column("prediction_s")
         cost = chunk.column("cost")
+        ok = chunk.column("ok").astype(bool)
+        attempts = chunk.column("attempts")
+        hedge = chunk.column("hedge_cost")
         self.all_n += len(chunk)
+        self.all_ok_n += int(ok.sum())
         self.all_sketch.update(lat)
 
         sel = chunk.keep_mask(self.drop_tags)
         if sel is None:
             klat, kpred, kcost, kcold = lat, pred, cost, cold
+            kok, katt, khdg = ok, attempts, hedge
         else:
             klat, kpred, kcost, kcold = lat[sel], pred[sel], cost[sel], \
                 cold[sel]
+            kok, katt, khdg = ok[sel], attempts[sel], hedge[sel]
         n_cold = int(kcold.sum())
-        self.kept.fold(klat, kpred, kcost, n_cold)
+        self.kept.fold(klat, kpred, kcost, n_cold, kok, katt, khdg)
         warm_m = ~kcold
-        self.warm.fold(klat[warm_m], kpred[warm_m], kcost[warm_m], 0)
-        self.cold.fold(klat[kcold], kpred[kcold], kcost[kcold], n_cold)
+        self.warm.fold(klat[warm_m], kpred[warm_m], kcost[warm_m], 0,
+                       kok[warm_m], katt[warm_m], khdg[warm_m])
+        self.cold.fold(klat[kcold], kpred[kcold], kcost[kcold], n_cold,
+                       kok[kcold], katt[kcold], khdg[kcold])
 
         # phase-resolved setup sums (cold starts + pool claims, kept tags)
         kinds = chunk.column("cold_kind")
@@ -300,6 +326,12 @@ class Summary:
     max_s: float
     total_cost: float
     mean_cost: float
+    # reliability aggregates (PR 10) — identities on fault-free runs, so
+    # every pre-existing positional construction stays valid
+    n_failed: int = 0
+    availability: float = 1.0
+    mean_attempts: float = 1.0
+    hedge_cost: float = 0.0
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -331,8 +363,12 @@ def summarize(records, *, warm_only: bool = False, cold_only: bool = False,
         lat = records.response_s()
         pred = records.column("prediction_s")
         cost = records.column("cost")
+        ok = records.column("ok").astype(bool)
+        attempts = records.column("attempts")
+        hedge = records.column("hedge_cost")
         if sel is not None:
             lat, pred, cost, cold = lat[sel], pred[sel], cost[sel], cold[sel]
+            ok, attempts, hedge = ok[sel], attempts[sel], hedge[sel]
         n = int(lat.size)
         n_cold = int(cold.sum())
     else:
@@ -346,6 +382,9 @@ def summarize(records, *, warm_only: bool = False, cold_only: bool = False,
         lat = np.array([r.response_s for r in rs])
         pred = np.array([r.prediction_s for r in rs])
         cost = np.array([r.cost for r in rs])
+        ok = np.array([r.ok for r in rs], dtype=bool)
+        attempts = np.array([r.attempts for r in rs], dtype=float)
+        hedge = np.array([r.hedge_cost for r in rs])
     if n == 0:
         return Summary(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)
     p50, p95, p99 = np.percentile(lat, [50, 95, 99])
@@ -355,7 +394,10 @@ def summarize(records, *, warm_only: bool = False, cold_only: bool = False,
         mean_prediction_s=float(pred.mean()), ci95_prediction_s=_ci95(pred),
         p50_s=float(p50), p95_s=float(p95), p99_s=float(p99),
         max_s=float(lat.max()),
-        total_cost=float(cost.sum()), mean_cost=float(cost.mean()))
+        total_cost=float(cost.sum()), mean_cost=float(cost.mean()),
+        n_failed=n - int(ok.sum()), availability=float(ok.sum()) / n,
+        mean_attempts=float(attempts.mean()),
+        hedge_cost=float(hedge.sum()))
 
 
 def phase_breakdown(records, *, drop_tags: tuple = ("prime",)) -> dict:

@@ -59,6 +59,12 @@ class ProviderProfile:
     slow per hop, wide, cheap per GB; the queue is SQS-shaped — fast per
     message, thin, expensive per GB.  ``repro.core.distributed`` turns
     these into ``CommsChannel`` objects via :meth:`comms_channel`.
+    ``fault_*``: the provider's baseline failure-process rates
+    (``repro.core.faults``): per-attempt provision-failure and
+    mid-execution crash probabilities, throttle-storm frequency/dwell/429
+    rate, and the per-lane crash rate on the sharded gang path.  Nothing
+    reads them unless a scenario builds a ``FaultConfig`` from the
+    profile, so they change no fair-weather number.
     """
     name: str
     provision_base_s: float = LAMBDA_PROVISION_BASE_S
@@ -75,6 +81,12 @@ class ProviderProfile:
     queue_hop_s: float = 0.004
     queue_gbps: float = 0.5
     queue_usd_gb: float = 0.04
+    fault_provision_fail: float = 0.002
+    fault_exec_crash: float = 0.001
+    fault_storms_per_day: float = 2.0
+    fault_storm_mean_s: float = 120.0
+    fault_storm_throttle_p: float = 0.9
+    fault_lane_fault: float = 0.001
 
     # ----------------------------------------------------- resource model
     def cpu_share(self, memory_mb: float) -> float:
@@ -136,6 +148,14 @@ MODAL_GPU = ProviderProfile(
     bill_idle=True,              # the container bills while kept warm
     scaledown_s=300.0,           # Modal's scaledown_window default
     lambda_limits=False,
+    # GPU serverless fails harder: host+accelerator attach multiplies the
+    # provision failure surface, and spot-backed capacity preempts running
+    # sandboxes far more often than Lambda reclaims firecracker VMs
+    fault_provision_fail=0.010,
+    fault_exec_crash=0.004,
+    fault_storms_per_day=4.0,
+    fault_storm_mean_s=180.0,
+    fault_lane_fault=0.004,
 )
 
 PROVIDERS: dict[str, ProviderProfile] = {p.name: p for p in

@@ -45,9 +45,11 @@ from typing import Callable, Optional, Tuple
 
 from repro.core import workload as wl
 from repro.core.cluster import BatchingConfig
+from repro.core.faults import FaultConfig
 from repro.core.sla import GPU_INTERACTIVE, INTERACTIVE, SLA
 from repro.core.stack import (BASELINE, ColdstartConfig, KeepaliveConfig,
-                              PolicyStack, ScalingConfig, ShardingConfig)
+                              PolicyStack, ReliabilityConfig, ScalingConfig,
+                              ShardingConfig)
 
 # Named policy stacks: the single-axis stacks differ from ``baseline`` on
 # exactly one axis, so a scenario verdict attributes the win to that axis;
@@ -93,11 +95,18 @@ POLICY_STACKS: dict = {
                                                         fanout=8)),
     "sharded_gang": BASELINE.with_(sharding=ShardingConfig(
         kind="gang", fanout=8, co_place=True, gang_prewarm=True)),
+    # --- reliability ladder (DESIGN.md §11): cumulative rungs graded by
+    # the chaos scenario — retries recover availability, hedging cuts the
+    # fault tail, degrade keeps serving through throttle storms
+    "retry": BASELINE.with_(reliability="retry"),
+    "retry_hedge": BASELINE.with_(reliability="hedge"),
+    "retry_hedge_degrade": BASELINE.with_(reliability="degrade"),
 }
 
 # which Scenario.tuning config type tunes which PolicyStack axis
 _TUNED_AXES = {KeepaliveConfig: "keepalive", ScalingConfig: "scaling",
-               ColdstartConfig: "coldstart"}
+               ColdstartConfig: "coldstart",
+               ReliabilityConfig: "reliability"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,15 +150,22 @@ class Scenario:
                                         # the sharding fan-out ladder) pin
                                         # the others to the baseline kind
                                         # so the report stays readable.
+    faults: Optional[FaultConfig] = None    # chaos injection: every stack
+                                            # the suite sweeps on this
+                                            # scenario runs under the SAME
+                                            # seeded failure processes, so
+                                            # availability deltas are pure
+                                            # policy effects.  None keeps
+                                            # fair-weather semantics.
 
     def __post_init__(self):
         for cfg in self.tuning:
             if type(cfg) not in _TUNED_AXES:
                 raise TypeError(
                     f"{self.name}: tuning entries must be KeepaliveConfig / "
-                    f"ScalingConfig / ColdstartConfig, got {cfg!r} (the "
-                    f"other axes have no per-scenario tuning — put them on "
-                    f"the stack itself)")
+                    f"ScalingConfig / ColdstartConfig / ReliabilityConfig, "
+                    f"got {cfg!r} (the other axes have no per-scenario "
+                    f"tuning — put them on the stack itself)")
 
     def deploy(self, platform) -> list:
         """Deploy the fleet on ``platform``; returns specs in fleet order."""
@@ -467,6 +483,64 @@ register(Scenario(
                      ShardingConfig(kind="gang", fanout=8, co_place=True,
                                     gang_prewarm=True)),
     },
+))
+
+# unreliable_burst: the chaos scenario (DESIGN.md §11).  A steady 1.5 rps
+# stream on the primary fleet runs through a faulted provider: per-attempt
+# provision failures (2%) and mid-exec crashes (1%) plus correlated
+# throttle storms (~2 per hour, ~2 min long, 90% 429s while ON).  The
+# reliability ladder is the story, and each rung buys a different thing:
+#
+#   * ``none``   — every fault is a failed request: availability ~90%.
+#   * ``retry``  — backoff + retries absorb the *transient* faults
+#     (provision, crash) but cannot outlast a 2-minute storm, so
+#     availability recovers only to ~95%.
+#   * ``hedge``  — same availability as retry; the speculative duplicate
+#     cuts the latency tail the retries created.
+#   * ``degrade``— the shed signal (attempt failures within the window)
+#     trips a few seconds into each storm and routes arrivals + mid-storm
+#     retries to the cheap ``fallback`` fleet (a different resource class,
+#     outside the storm), recovering availability past the SLA's 99.9%
+#     floor at bounded extra cost.
+#
+# All stacks run under the SAME seeded fault processes (``Scenario.faults``)
+# — availability deltas in the report are pure policy effects.  The sweep
+# pins the non-reliability axes to the baseline kinds: the ladder is the
+# report, not a cross-product.
+UNRELIABLE_RATE_RPS = 1.5
+UNRELIABLE_DURATION_S = 3600.0
+
+register(Scenario(
+    name="unreliable_burst",
+    description="Chaos regime: provision failures, mid-exec crashes, and "
+                "2-minute throttle storms; the reliability ladder "
+                "(retry -> hedge -> degrade) recovers availability to "
+                ">= 99.9% at bounded cost.",
+    functions=(FleetFunction("resnet18", 1024),
+               FleetFunction("squeezenet", 512, name="fallback")),
+    trace=lambda fns, seed, scale: wl.multi_function_trace(
+        {fns[0]: UNRELIABLE_RATE_RPS, fns[1]: 0.01},
+        UNRELIABLE_DURATION_S * scale, seed=seed),
+    sla=SLA("interactive_ha", p95_s=2.0, p99_s=10.0,
+            min_availability=0.999),
+    expected_winner="retry_hedge_degrade",
+    rival="retry",
+    seed=31,
+    tiny_scale=0.1,
+    tuning=(ReliabilityConfig(kind="degrade", max_attempts=6,
+                              degrade_to="fallback@512"),),
+    sweep_axes={
+        "placement": ("mru",), "keepalive": ("fixed",),
+        "scaling": ("lambda",), "coldstart": ("full",),
+        "concurrency": (1,), "batching": (None,),
+        "reliability": (None,
+                        ReliabilityConfig(kind="retry"),
+                        ReliabilityConfig(kind="hedge"),
+                        ReliabilityConfig(kind="degrade")),
+    },
+    faults=FaultConfig(provision_fail=0.02, exec_crash=0.01,
+                       storms_per_day=48, storm_mean_s=120.0,
+                       storm_throttle_p=0.9, seed=97),
 ))
 
 register(Scenario(

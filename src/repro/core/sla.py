@@ -16,10 +16,18 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class SLA:
+    """Latency-percentile bounds plus an availability floor.
+
+    ``min_availability`` is the fraction of requests that must complete
+    successfully (``ok=True`` on their record); the default 0.0 never
+    fires, so fault-free SLAs grade exactly as before the reliability
+    axis existed.
+    """
     name: str
     p50_s: float = float("inf")
     p95_s: float = float("inf")
     p99_s: float = float("inf")
+    min_availability: float = 0.0
 
     def evaluate(self, records) -> dict:
         fold = getattr(records, "fold", None)
@@ -27,21 +35,29 @@ class SLA:
             # folded streaming sink: percentiles from the O(1)-memory
             # sketch over the full (unfiltered) latency stream
             p50, p95, p99 = fold.all_sketch.percentile([50, 95, 99])
-            obs = {"p50": p50, "p95": p95, "p99": p99}
+            avail = fold.all_ok_n / fold.all_n
+            obs = {"p50": p50, "p95": p95, "p99": p99,
+                   "availability": avail}
         else:
             if not records:
                 lat = np.zeros(1)
+                avail = 1.0
             elif hasattr(records, "response_s"):
                 lat = records.response_s()  # columnar RecordArray fast path
+                ok = records.column("ok").astype(bool)
+                avail = float(ok.mean())
             else:
                 lat = np.array([r.response_s for r in records])
+                avail = sum(r.ok for r in records) / len(records)
             obs = {"p50": float(np.percentile(lat, 50)),
                    "p95": float(np.percentile(lat, 95)),
-                   "p99": float(np.percentile(lat, 99))}
+                   "p99": float(np.percentile(lat, 99)),
+                   "availability": avail}
         violations = {
             "p50": obs["p50"] > self.p50_s,
             "p95": obs["p95"] > self.p95_s,
             "p99": obs["p99"] > self.p99_s,
+            "availability": obs["availability"] < self.min_availability,
         }
         return {"sla": self.name, "observed": obs,
                 "violations": violations,

@@ -13,8 +13,9 @@ policy configuration a *value*:
     the selected ``kind`` never reads raises rather than silently
     dropping intent), so equality and hashing mean "same behaviour",
     robust against axis reordering.
-  * ``PolicyStack`` bundles all eight axes (the distributed-inference
-    ``ShardingConfig`` joined in PR 9).  ``materialize()`` builds
+  * ``PolicyStack`` bundles all nine axes (the distributed-inference
+    ``ShardingConfig`` joined in PR 9, the ``ReliabilityConfig``
+    retry/hedge/degrade axis in PR 10).  ``materialize()`` builds
     *fresh* policy instances (the single place where state isolation
     between runs is guaranteed — no deep-copy rules at call sites),
     ``with_()`` derives variants, ``to_dict()/from_dict()`` give a JSON
@@ -218,6 +219,89 @@ class ShardingConfig:
         return None if self.kind == "none" else self
 
 
+# ---------------------------------------------------------------- reliability
+@dataclasses.dataclass(frozen=True)
+class ReliabilityConfig:
+    """Reliability axis (DESIGN.md §11): what the client/platform does when
+    an attempt fails.  Kinds form a cumulative ladder —
+
+    ``none``
+        Today's fair-weather semantics: one attempt, no timeout; under an
+        active fault model a failed attempt fails the request.  Must stay
+        bit-identical to the pre-axis path (the PR-1 golden contract).
+    ``retry``
+        Per-request timeout (``timeout_s``; 0 disables) plus retries with
+        exponential backoff and decorrelated jitter
+        (``delay = min(cap, uniform(base, 3 * prev))``), capped at
+        ``max_attempts`` total attempts.
+    ``hedge``
+        ``retry`` plus tail-cutting request hedging: one speculative
+        duplicate fires after the fleet's observed p-``hedge_quantile``
+        success latency (``hedge_min_s`` floors the delay until enough
+        observations exist); first completion wins, the loser's work is
+        still billed — the wasted-dollars/latency trade.
+    ``degrade``
+        ``hedge`` plus load-shed/degrade: when ``shed_threshold`` failures
+        land within ``shed_window_s``, new arrivals route to the cheaper
+        registered fleet named ``degrade_to`` (or are shed outright when
+        it is empty) until the storm clears.
+
+    Knobs above a kind's rung must stay at their defaults (the
+    ``_require_defaults`` discipline every axis follows).
+    """
+
+    kind: str = "none"
+    timeout_s: float = 0.0
+    max_attempts: int = 3
+    backoff_base_s: float = 0.2
+    backoff_cap_s: float = 5.0
+    hedge_quantile: float = 0.95
+    hedge_min_s: float = 0.05
+    shed_window_s: float = 30.0
+    shed_threshold: int = 10
+    degrade_to: str = ""
+
+    def __post_init__(self):
+        if self.kind not in ("none", "retry", "hedge", "degrade"):
+            raise KeyError(f"unknown reliability kind {self.kind!r}; "
+                           f"known: ['degrade', 'hedge', 'none', 'retry']")
+        object.__setattr__(self, "max_attempts", int(self.max_attempts))
+        object.__setattr__(self, "shed_threshold", int(self.shed_threshold))
+        if self.kind == "none":
+            _require_defaults(self, ("timeout_s", "max_attempts",
+                                     "backoff_base_s", "backoff_cap_s",
+                                     "hedge_quantile", "hedge_min_s",
+                                     "shed_window_s", "shed_threshold",
+                                     "degrade_to"))
+            return
+        if self.kind == "retry":
+            _require_defaults(self, ("hedge_quantile", "hedge_min_s",
+                                     "shed_window_s", "shed_threshold",
+                                     "degrade_to"))
+        elif self.kind == "hedge":
+            _require_defaults(self, ("shed_window_s", "shed_threshold",
+                                     "degrade_to"))
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got "
+                             f"{self.max_attempts}")
+        if self.timeout_s < 0.0:
+            raise ValueError(f"timeout_s must be >= 0, got {self.timeout_s}")
+        if self.backoff_base_s <= 0.0 or \
+                self.backoff_cap_s < self.backoff_base_s:
+            raise ValueError(
+                f"need 0 < backoff_base_s <= backoff_cap_s, got "
+                f"{self.backoff_base_s} / {self.backoff_cap_s}")
+        if not 0.0 < self.hedge_quantile < 1.0:
+            raise ValueError(f"hedge_quantile must be in (0, 1), got "
+                             f"{self.hedge_quantile}")
+
+    def materialize(self):
+        """The cluster's reliability kwarg: ``None`` for today's semantics
+        (the fast-path gate key, like ``ShardingConfig``), else this
+        frozen config."""
+        return None if self.kind == "none" else self
+
+
 # ------------------------------------------------------------------ coercions
 # Instance coercion matches EXACT registry types only (``type(x) is ...``):
 # a hand-written subclass carries behaviour a serializable config cannot
@@ -333,14 +417,29 @@ def _coerce_sharding(s) -> ShardingConfig:
                     f"('none'/'gang'), or its dict form, got {s!r}")
 
 
+def _coerce_reliability(r) -> ReliabilityConfig:
+    if isinstance(r, ReliabilityConfig):
+        return r
+    if r is None:
+        return ReliabilityConfig()
+    if isinstance(r, str):
+        return ReliabilityConfig(kind=r)
+    if isinstance(r, Mapping):
+        return ReliabilityConfig(**r)
+    raise TypeError(f"reliability must be None, a ReliabilityConfig, a kind "
+                    f"name ('none'/'retry'/'hedge'/'degrade'), or its dict "
+                    f"form, got {r!r}")
+
+
 # ---------------------------------------------------------------- PolicyStack
 @dataclasses.dataclass(frozen=True)
 class PolicyStack:
-    """One point in the policy space: all eight axes, as a frozen value.
+    """One point in the policy space: all nine axes, as a frozen value.
 
     The default instance IS the Lambda-2017 baseline (MRU placement, fixed
     480 s TTL, implicit scaling, full colds, concurrency 1, no batching,
-    no container cap, no sharding) — the stack the bit-parity goldens pin.
+    no container cap, no sharding, no reliability policy) — the stack the
+    bit-parity goldens pin.
 
     Axis values coerce on construction: registry names (``"adaptive"``),
     axis configs, their dict forms, and registry policy *instances* (their
@@ -356,6 +455,7 @@ class PolicyStack:
     batching: Optional[BatchingConfig] = None
     max_containers: int = 0
     sharding: ShardingConfig = ShardingConfig()
+    reliability: ReliabilityConfig = ReliabilityConfig()
 
     def __post_init__(self):
         object.__setattr__(self, "placement",
@@ -369,6 +469,8 @@ class PolicyStack:
         object.__setattr__(self, "batching", _coerce_batching(self.batching))
         object.__setattr__(self, "max_containers", int(self.max_containers))
         object.__setattr__(self, "sharding", _coerce_sharding(self.sharding))
+        object.__setattr__(self, "reliability",
+                           _coerce_reliability(self.reliability))
 
     # ------------------------------------------------------------- behaviour
     def materialize(self) -> dict:
@@ -383,7 +485,8 @@ class PolicyStack:
                     concurrency=self.concurrency,
                     batching=self.batching,
                     max_containers=self.max_containers,
-                    sharding=self.sharding.materialize())
+                    sharding=self.sharding.materialize(),
+                    reliability=self.reliability.materialize())
 
     def with_(self, **overrides) -> "PolicyStack":
         """Derive a variant; values coerce like constructor arguments."""
@@ -404,7 +507,8 @@ class PolicyStack:
                 "batching": (dataclasses.asdict(self.batching)
                              if self.batching is not None else None),
                 "max_containers": self.max_containers,
-                "sharding": dataclasses.asdict(self.sharding)}
+                "sharding": dataclasses.asdict(self.sharding),
+                "reliability": dataclasses.asdict(self.reliability)}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "PolicyStack":
@@ -441,15 +545,17 @@ class PolicyStack:
         else:
             shard = f"gang{sh.fanout}" + ("+co" if sh.co_place else "") + \
                 ("+pw" if sh.gang_prewarm else "")
+        rel = self.reliability
         return (self.placement, self.keepalive.kind, self.scaling.kind,
                 self.coldstart.kind, self.concurrency,
-                self.batching is not None, shard)
+                self.batching is not None, shard,
+                "-" if rel.kind == "none" else rel.kind)
 
     # ------------------------------------------------------------ legacy shim
     @classmethod
     def from_kwargs(cls, *, placement="mru", keepalive=None, scaling=None,
                     coldstart=None, concurrency: int = 1, batching=None,
-                    max_containers: int = 0, sharding=None,
+                    max_containers: int = 0, sharding=None, reliability=None,
                     keepalive_s: float = 480.0) -> "PolicyStack":
         """Build a stack from the legacy seven-kwarg surface.  Mirrors the
         old ``make_*`` defaults: ``keepalive=None`` or a registry name uses
@@ -461,7 +567,7 @@ class PolicyStack:
         return cls(placement=placement, keepalive=ka, scaling=scaling,
                    coldstart=coldstart, concurrency=concurrency,
                    batching=batching, max_containers=max_containers,
-                   sharding=sharding)
+                   sharding=sharding, reliability=reliability)
 
 
 #: The Lambda-2017 baseline stack (also ``PolicyStack()``).
@@ -470,7 +576,7 @@ BASELINE = PolicyStack()
 
 # ------------------------------------------------------------------- running
 def run_stack(specs, trace, stack: PolicyStack, *, seed: int = 0, sla=None,
-              scenario=None) -> dict:
+              scenario=None, faults=None) -> dict:
     """Run one stack on one trace and summarize it — the single runner
     behind ``benchmarks.scenario_suite.run_combo`` and
     ``ExperimentSpec.run``.
@@ -479,6 +585,12 @@ def run_stack(specs, trace, stack: PolicyStack, *, seed: int = 0, sla=None,
     per-axis configs and shared container cap via ``Scenario.tune`` before
     materializing.  Policies are always materialized fresh, so repeated
     calls are bit-identical.
+
+    ``faults`` (a ``repro.core.faults.FaultConfig``) injects the failure
+    processes; when omitted it defaults to the scenario's own
+    ``Scenario.faults``, so chaos scenarios fault every stack they sweep
+    identically.  Faultless runs add availability/attempts columns at
+    their fair-weather values (1.0 / 1.0) and change nothing else.
 
     ``cost_per_1k`` folds in the platform-side mitigation spend (snapshot
     storage, bare-pool idle — zero under ``full`` — plus, on bill-idle
@@ -490,7 +602,9 @@ def run_stack(specs, trace, stack: PolicyStack, *, seed: int = 0, sla=None,
     from repro.core.cluster import ClusterSimulator
     if scenario is not None:
         stack = scenario.tune(stack)
-    sim = ClusterSimulator(specs, seed=seed, stack=stack)
+        if faults is None:
+            faults = scenario.faults
+    sim = ClusterSimulator(specs, seed=seed, stack=stack, faults=faults)
     recs = sim.run(list(trace))
     s = metrics.summarize(recs)
     mit_per_1k = sim.mitigation_cost / max(s.n, 1) * 1000.0
@@ -501,7 +615,10 @@ def run_stack(specs, trace, stack: PolicyStack, *, seed: int = 0, sla=None,
            "cost_per_1k": (s.total_cost / max(s.n, 1) * 1000.0
                            + mit_per_1k),
            "mitigation_per_1k": mit_per_1k,
-           "evictions": sim.evictions, "prewarms": sim.prewarms}
+           "evictions": sim.evictions, "prewarms": sim.prewarms,
+           "availability": s.availability, "failed": s.n_failed,
+           "attempts": s.mean_attempts,
+           "hedge_per_1k": s.hedge_cost / max(s.n, 1) * 1000.0}
     if sla is not None:
         if "prime" not in recs.tags_seen:
             kept = recs                 # columnar fast path (no filtering)
@@ -588,16 +705,25 @@ class ExperimentSpec:
         # tune exactly once, run what was tuned: the report's
         # effective_stack is by construction the stack that produced it
         effective = sc.tune(self.stack) if self.tuned else self.stack
-        row = run_stack(specs, trace, effective, seed=self.seed, sla=sc.sla)
+        row = run_stack(specs, trace, effective, seed=self.seed, sla=sc.sla,
+                        faults=sc.faults)
         verdict = None
         if self.versus:
             vs = _named_stack(self.versus)
             other = run_stack(specs, trace,
                               sc.tune(vs) if self.tuned else vs,
-                              seed=self.seed, sla=sc.sla)
+                              seed=self.seed, sla=sc.sla, faults=sc.faults)
+            if sc.faults is not None:
+                # fault scenarios grade on what reliability buys: meet the
+                # SLA (availability floor included) and recover more
+                # availability than the rival under identical faults
+                win = bool(row["sla_ok"] and
+                           row["availability"] > other["availability"])
+            else:
+                win = bool(row["cold_rate"] < other["cold_rate"]
+                           and row["p95_s"] < other["p95_s"])
             verdict = {"versus": self.versus, "versus_row": other,
-                       "win": bool(row["cold_rate"] < other["cold_rate"]
-                                   and row["p95_s"] < other["p95_s"])}
+                       "win": win}
         return ExperimentResult(
             spec=self, n_requests=len(trace), fleet=[s.name for s in specs],
             effective_stack=effective.to_dict(), verdict=verdict, **row)
@@ -634,6 +760,10 @@ class ExperimentResult:
     mitigation_per_1k: float
     evictions: int
     prewarms: int
+    availability: float = 1.0
+    failed: int = 0
+    attempts: float = 1.0
+    hedge_per_1k: float = 0.0
     sla: str = ""
     sla_ok: bool = True
     sla_violations: list = dataclasses.field(default_factory=list)
@@ -653,6 +783,9 @@ class ExperimentResult:
                 f"cold={self.cold_rate:.2%} p95={self.p95_s:.3f}s "
                 f"$/1k={self.cost_per_1k:.4f} "
                 f"sla={'ok' if self.sla_ok else 'FAIL'}")
+        if self.failed or self.attempts > 1.0:
+            line += (f" avail={self.availability:.3%} "
+                     f"attempts={self.attempts:.2f}")
         if self.verdict is not None:
             o = self.verdict["versus_row"]
             line += (f" | vs {self.verdict['versus']}: cold "
@@ -696,7 +829,8 @@ def _spec_row(spec: "ExperimentSpec") -> dict:
     """Process-pool work unit: one ExperimentSpec -> one run_stack row."""
     sc, fleet_specs, trace = _scenario_ctx(spec.scenario, spec.scale)
     return run_stack(fleet_specs, trace, spec.stack, seed=spec.seed,
-                     sla=sc.sla, scenario=sc if spec.tuned else None)
+                     sla=sc.sla, scenario=sc if spec.tuned else None,
+                     faults=sc.faults)
 
 
 def run_specs(specs: Sequence, *, jobs: int = 1) -> list:

@@ -96,7 +96,8 @@ def test_record_field_order_is_pinned():
                              "cold", "prediction_s", "exec_s", "cost",
                              "container_id", "memory_mb", "tag", "fn",
                              "batch_size", "cold_kind", "provision_s",
-                             "bootstrap_s", "load_s", "restore_s")
+                             "bootstrap_s", "load_s", "restore_s",
+                             "ok", "attempts", "hedge_cost", "requeues")
 
 
 # ----------------------------------------------------------- golden re-pin

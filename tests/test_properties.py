@@ -236,3 +236,97 @@ def test_coplacement_cold_starts_never_worse_property(seed, rate):
         recs = sim.run(trace)
         colds[co] = sum(1 for r in recs if r.cold)
     assert colds[True] <= colds[False]
+
+
+# ----------------------------------------------------------- reliability
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 2.5))
+@settings(max_examples=8, deadline=None)
+def test_retry_monotonically_improves_availability_property(seed, rate):
+    """Under identical counter-based fault fates, growing the retry budget
+    never loses requests: every extra attempt can only turn a failure
+    into a success (fates are keyed by (rid, attempt), never rerolled)."""
+    import itertools as _it
+
+    import repro.core.container as container_mod
+    from repro.core.cluster import ClusterSimulator
+    from repro.core.faults import FaultConfig
+    from repro.core.stack import PolicyStack, ReliabilityConfig
+
+    spec = FunctionSpec(Handler(name="x", base_cpu_seconds=0.2,
+                                bootstrap_cpu_seconds=1.0,
+                                peak_memory_mb=100.0), 1024)
+    faults = FaultConfig(provision_fail=0.06, exec_crash=0.04,
+                         seed=seed % 10_000)
+    trace = list(poisson(rate, 300.0, seed=seed % 1000))
+    avail = []
+    for attempts in (1, 2, 4):
+        rel = (ReliabilityConfig(kind="retry", max_attempts=attempts)
+               if attempts > 1 else None)
+        container_mod._ids = _it.count()
+        sim = ClusterSimulator(spec, seed=0,
+                               stack=PolicyStack(reliability=rel)
+                               if rel else None,
+                               faults=faults)
+        recs = sim.run(list(trace))
+        assert len(recs) == len(trace)
+        avail.append(sum(r.ok for r in recs) / len(recs))
+    assert avail[0] <= avail[1] <= avail[2]
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 2.0))
+@settings(max_examples=6, deadline=None)
+def test_hedging_never_worsens_p50_beyond_budget_property(seed, rate):
+    """The speculative duplicate races the primary — first completion
+    wins — so the median success latency under hedging stays within the
+    hedge budget (the floor delay) of the retry-only median."""
+    import itertools as _it
+
+    import repro.core.container as container_mod
+    from repro.core.cluster import ClusterSimulator
+    from repro.core.faults import FaultConfig
+    from repro.core.stack import PolicyStack, ReliabilityConfig
+
+    spec = FunctionSpec(Handler(name="x", base_cpu_seconds=0.2,
+                                bootstrap_cpu_seconds=1.0,
+                                peak_memory_mb=100.0), 1024)
+    faults = FaultConfig(provision_fail=0.05, exec_crash=0.05,
+                         seed=seed % 10_000)
+    trace = list(poisson(rate, 300.0, seed=seed % 1000))
+    p50 = {}
+    for kind in ("retry", "hedge"):
+        rel = ReliabilityConfig(kind=kind, max_attempts=3)
+        container_mod._ids = _it.count()
+        sim = ClusterSimulator(spec, seed=0,
+                               stack=PolicyStack(reliability=rel),
+                               faults=faults)
+        recs = sim.run(list(trace))
+        lat = sorted(r.response_s for r in recs if r.ok)
+        p50[kind] = lat[len(lat) // 2] if lat else 0.0
+    assert p50["hedge"] <= p50["retry"] + \
+        ReliabilityConfig(kind="hedge").hedge_min_s + 1e-9
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 3.0))
+@settings(max_examples=8, deadline=None)
+def test_reliability_kind_none_identity_property(seed, rate):
+    """A kind-none axis with no fault model is the exact fair-weather
+    machine: bit-identical rows to the default constructor on any trace."""
+    import itertools as _it
+
+    import repro.core.container as container_mod
+    from repro.core.cluster import ClusterSimulator
+    from repro.core.faults import FaultConfig
+    from repro.core.stack import PolicyStack, ReliabilityConfig
+
+    spec = FunctionSpec(Handler(name="x", base_cpu_seconds=0.2,
+                                bootstrap_cpu_seconds=1.0,
+                                peak_memory_mb=100.0), 1024)
+    trace = list(poisson(rate, 200.0, seed=seed % 1000))
+    container_mod._ids = _it.count()
+    base = ClusterSimulator(spec, seed=seed % 97).run(list(trace))
+    container_mod._ids = _it.count()
+    none = ClusterSimulator(
+        spec, seed=seed % 97,
+        stack=PolicyStack(reliability=ReliabilityConfig(kind="none")),
+        faults=FaultConfig()).run(list(trace))
+    assert base._all_rows() == none._all_rows()

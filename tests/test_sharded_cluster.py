@@ -297,7 +297,7 @@ def test_sharded_110b_tiny_scale_verdict():
     from repro.core import scenarios
     sc = scenarios.get("sharded_110b")
     res = run_scenario(sc, scale=sc.tiny_scale)
-    rows = {key.axes_key()[-1]: row for key, row in res["rows"].items()}
+    rows = {key.axes_key()[6]: row for key, row in res["rows"].items()}
     assert set(rows) == {"-", "gang4", "gang8", "gang8+co", "gang8+co+pw"}
     # the fan-out ladder: independent placement multiplies the cold tail
     assert rows["-"]["cold_rate"] <= rows["gang4"]["cold_rate"] \
@@ -324,5 +324,5 @@ def test_sharding_config_validation():
         ShardingConfig(kind="none", fanout=4)   # non-default knob on none
     st = PolicyStack(sharding={"kind": "gang", "fanout": 4})
     assert st.sharding.fanout == 4
-    assert st.axes_key()[-1] == "gang4"
-    assert PolicyStack().axes_key()[-1] == "-"
+    assert st.axes_key()[6] == "gang4"
+    assert PolicyStack().axes_key()[6] == "-"

@@ -125,14 +125,18 @@ def test_grid_cross_product_size_uniqueness_and_membership():
         n *= len(vals)
     assert len(stacks) == n
     assert len(set(stacks)) == n              # hashable and all distinct
-    # every named stack is a point of the suite's cross-product (sharded
-    # stacks live on the sharded scenario's pinned sweep grid instead)
+    # every named stack is a point of the suite's cross-product (sharded /
+    # reliability stacks live on their scenario's pinned sweep grid instead)
     from repro.core import scenarios as _scen
     sharded_grid = set(PolicyStack.grid(
         _scen.get("sharded_110b").sweep_axes))
+    chaos_grid = set(PolicyStack.grid(
+        _scen.get("unreliable_burst").sweep_axes))
     for name, s in POLICY_STACKS.items():
         if s.sharding.kind != "none":
             assert s in sharded_grid, name
+        elif s.reliability.kind != "none":
+            assert s in chaos_grid, name
         else:
             assert s in set(stacks), name
     # deriving the grid from a non-default base keeps the base's axes

@@ -249,6 +249,44 @@ def test_nondefault_stacks_bypass_the_fast_loop():
     assert not sim._fast
 
 
+def test_reliability_and_faults_bypass_the_fast_loop():
+    """The fused loops know nothing about attempts/faults: any non-none
+    reliability axis or an active fault model must route through the
+    general loop, and a kind-none axis must keep the fast path."""
+    from repro.core.faults import FaultConfig
+    from repro.core.stack import ReliabilityConfig
+    sim = ClusterSimulator(_spec(), reliability=ReliabilityConfig(
+        kind="retry"))
+    assert not sim._fast
+    sim = ClusterSimulator(_spec(), faults=FaultConfig(exec_crash=0.01))
+    assert not sim._fast
+    # kind="none" materializes to None: fast path preserved
+    sim = ClusterSimulator(_spec(), reliability=ReliabilityConfig(
+        kind="none"))
+    assert sim._fast
+    # an all-zero FaultConfig builds no FaultModel: fast path preserved
+    sim = ClusterSimulator(_spec(), faults=FaultConfig())
+    assert sim._fast
+
+
+def test_faulted_general_run_bit_identical_records_to_fast_when_inactive():
+    """A kind-none reliability stack forced through the general loop still
+    produces the fast loop's exact rows — the reliability fields ride
+    along at their fair-weather values."""
+    trace = list(poisson(0.004, 500_000.0, seed=3))
+    from repro.core.stack import ReliabilityConfig
+    _reset_cids()
+    fast = ClusterSimulator(_spec(), seed=0).run(trace)
+    _reset_cids()
+    sim = ClusterSimulator(_spec(), seed=0,
+                           reliability=ReliabilityConfig(kind="none"))
+    sim._fast = False
+    general = sim.run(trace)
+    assert list(fast) == list(general)
+    assert all(r.ok and r.attempts == 1 and r.hedge_cost == 0.0
+               for r in general)
+
+
 # ------------------------------------------------ bounded-memory end to end
 @pytest.mark.slow
 def test_streamed_day_runs_in_bounded_memory():
